@@ -1,0 +1,190 @@
+"""§Roofline: three-term analysis per (arch × shape × mesh) cell.
+
+    compute term    = HLO_dot_FLOPs(dev)        / peak_FLOP/s
+    memory term     = HBM_traffic_estimate(dev) / HBM_bw
+    collective term = HLO_collective_bytes(dev) / link_bw
+
+Sources & methodology (see EXPERIMENTS.md §Roofline for the full discussion):
+  * FLOPs and collective bytes come from the trip-count-corrected static
+    analysis of the compiled per-device HLO (launch/hlo_cost.py) — XLA's own
+    cost_analysis counts while bodies once (calibrated in tests/test_hlo_cost).
+  * Raw HLO "bytes accessed" counts loop-carried buffers once per iteration,
+    but on TPU those live in VMEM (scan state, flash accumulators), so it
+    overestimates HBM traffic by orders of magnitude for scanned models.
+    The memory term therefore uses an explicit HBM-traffic model:
+        train:   3*W + 2*O + 3*A + 2*V      (weights fwd/bwd/update, opt r/w,
+                                             carries save+2xread, logits w/r)
+        prefill: W + 2*A + V + KV_write
+        decode:  W + KV_read (+state)        (weights + full cache per token)
+    with W=param bytes/dev, O=opt bytes/dev, A=saved activation carries/dev,
+    V=logit bytes/dev, all under the recorded shardings.
+  * MODEL_FLOPS = 2*N_active*tokens*(3 if train) + attention quadratic term
+    (0.5 causal) — at 32k context attention dominates 6ND ~20x, so omitting
+    it would misread every prefill cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12        # bf16, TPU v5e per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+
+def _tokens(shape: str) -> int:
+    return {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+            "decode_32k": 128, "long_500k": 1}[shape]
+
+
+def _seq(shape: str) -> int:
+    return {"train_4k": 4096, "prefill_32k": 32768,
+            "decode_32k": 32768, "long_500k": 524288}[shape]
+
+
+def _batch(shape: str) -> int:
+    return {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+            "long_500k": 1}[shape]
+
+
+def _cfg(arch: str):
+    from repro.configs import get_config
+    return get_config(arch)
+
+
+def attention_model_flops(cfg, shape: str, train: bool) -> float:
+    """Quadratic attention FLOPs (query-key + prob-value), causal 0.5."""
+    S, B = _seq(shape), _batch(shape)
+    if cfg.rwkv is not None:
+        # linear recurrence: D^2 per head per *processed token*
+        d = cfg.d_model
+        hd = cfg.rwkv.head_dim
+        toks = 1 if shape.startswith(("decode", "long")) else S
+        f = 4.0 * B * toks * d * hd * cfg.n_layers
+        return f * (3 if train else 1)
+    n_attn_layers = cfg.n_layers
+    window = cfg.sliding_window or 0
+    if cfg.family == "hybrid":
+        n_attn_layers = sum(1 for i in range(cfg.n_layers)
+                            if cfg.shared_attn_every and
+                            (i + 1) % cfg.shared_attn_every == 0)
+        # ssm layers: chunked SSD ~ linear
+    if cfg.mla:
+        qk = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        vd = cfg.mla.v_head_dim
+    else:
+        qk = vd = cfg.hd()
+    H = cfg.n_heads
+    if shape.startswith("decode") or shape == "long_500k":
+        kv = min(S, window) if window else S
+        f = 2.0 * B * H * kv * (qk + vd)
+        return f * n_attn_layers
+    kv_extent = min(S, window) if window else S
+    f = 2.0 * B * H * S * kv_extent * (qk + vd) * 0.5
+    return f * n_attn_layers * (3 if train else 1)
+
+
+def hbm_traffic(rec: dict, cfg) -> float:
+    """Per-device HBM bytes for one step (model documented above)."""
+    shape = rec["shape"]
+    n_dev = rec["n_devices"]
+    W = cfg.n_params() * 2.0 / n_dev
+    opt_b = rec.get("opt_bits", 32)
+    O = cfg.n_params() * (2.0 if opt_b == 8 else 8.0) / n_dev
+    S, B = _seq(shape), _batch(shape)
+    A = cfg.n_layers * B * min(S, 2 ** 31) * cfg.d_model * 2.0 / n_dev
+    V = B * (S if not shape.startswith(("decode", "long")) else 1) \
+        * cfg.vocab * 2.0 / n_dev
+    kind = ("train" if shape.startswith("train") else
+            "decode" if shape.startswith(("decode", "long")) else "prefill")
+    if kind == "train":
+        return 3 * W + 2 * O + 3 * A + 2 * V
+    if kind == "prefill":
+        kv_write = (rec.get("cache_bytes") or 0)
+        return W + 2 * A / cfg.n_layers * 4 + V + kv_write
+    # decode: weights + the full cache (+recurrent state) per token
+    cache = _decode_cache_bytes(cfg, shape) / n_dev
+    return W + cache + B * cfg.d_model * cfg.n_layers * 2.0 / n_dev
+
+
+def _decode_cache_bytes(cfg, shape: str) -> float:
+    S, B = _seq(shape), _batch(shape)
+    L = cfg.n_layers
+    if cfg.rwkv is not None:
+        d, hd = cfg.d_model, cfg.rwkv.head_dim
+        return L * B * (d // hd) * hd * hd * 4.0
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return L * B * S * per_tok * 2.0
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        ssm_state = (cfg.n_layers * 0.85) * B * (di // s.head_dim) \
+            * s.head_dim * s.d_state * 4.0
+        W_att = min(S, cfg.sliding_window or S)
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.shared_attn_every and
+                     (i + 1) % cfg.shared_attn_every == 0)
+        return ssm_state + n_attn * B * W_att * cfg.n_kv_heads * cfg.hd() * 4.0
+    return L * B * S * cfg.n_kv_heads * cfg.hd() * 2.0 * 2.0
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = _cfg(rec["arch"])
+    hc = rec.get("hlo_cost")
+    if hc:  # trip-count-corrected static analysis (see launch/hlo_cost.py)
+        flops = hc["flops"]
+        coll = hc["collective_total"]
+    else:
+        flops = rec["cost"]["flops"] or 0.0
+        coll = rec["collectives"]["total_bytes"]
+    mem_bytes = hbm_traffic(rec, cfg)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem_bytes / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    train = rec["shape"].startswith("train")
+    n = cfg.n_active_params()
+    model_flops = (2.0 * n * _tokens(rec["shape"]) * (3 if train else 1)
+                   + attention_model_flops(cfg, rec["shape"], train))
+    hlo_global = flops * rec["n_devices"]
+    useful = model_flops / hlo_global if hlo_global else 0.0
+    t_star = max(t_compute, t_memory, t_coll)
+    frac = (model_flops / rec["n_devices"] / PEAK_FLOPS) / t_star \
+        if t_star > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful, "roofline_fraction": frac,
+        "mem_gib": (rec["memory"].get("peak_bytes") or 0) / 2**30,
+    }
+
+
+def run(emit=print, mesh: str = "pod16x16", tag: str = ""):
+    rows = []
+    emit("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+         "dominant,useful_ratio,roofline_frac,mem_GiB")
+    suffix = f"__{tag}.json" if tag else ".json"
+    for f in sorted(ART.glob(f"*__{mesh}{suffix}")):
+        rec = json.loads(f.read_text())
+        if tag == "" and rec.get("tag"):
+            continue
+        a = analyze(rec)
+        if a is None:
+            st = rec.get("status")
+            emit(f"{rec['arch']},{rec['shape']},{rec['mesh']},-,-,-,{st},-,-,-")
+            continue
+        rows.append(a)
+        emit(f"{a['arch']},{a['shape']},{a['mesh']},"
+             f"{a['t_compute_s']*1e3:.3f},{a['t_memory_s']*1e3:.3f},"
+             f"{a['t_collective_s']*1e3:.3f},{a['dominant']},"
+             f"{a['useful_ratio']:.3f},{a['roofline_fraction']:.3f},"
+             f"{a['mem_gib']:.2f}")
+    return rows

@@ -1,0 +1,39 @@
+"""Paper §2 / Table 2: measured overhead growth per synchronization model.
+
+Runs each model on the diamond DAG (single dominator — the prescribed
+model's worst case) at growing task counts and reports the five overhead
+counters.  The asymptotic classes of Table 2 appear directly in the growth
+columns (n, n^2, r, 1).
+"""
+from __future__ import annotations
+
+from repro.core.edt import MODELS, TiledTaskGraph, run_model
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+SIZES = (8, 16, 32)
+
+
+def run(emit=print):
+    g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))})
+    emit("model,K,n_tasks,startup_ops,spatial_peak,inflight_tasks_peak,"
+         "inflight_deps_peak,garbage_peak,makespan")
+    rows = {}
+    for model in MODELS:
+        for K in SIZES:
+            params = {"K": K}
+            res = run_model(model, g, params, workers=8)
+            s = res.counters.summary()
+            n = res.n_tasks
+            rows[(model, K)] = s
+            emit(f"{model},{K},{n},{s['startup_ops']},{s['spatial_peak']},"
+                 f"{s['inflight_tasks_peak']},{s['inflight_deps_peak']},"
+                 f"{s['garbage_peak']},{s['makespan']:.2f}")
+    # growth factors n(32)^2/n(8)^2 = 16, n ratio = 16
+    for model in MODELS:
+        a, b = rows[(model, 8)], rows[(model, 32)]
+        emit(f"# {model}: startup x{b['startup_ops']/max(1,a['startup_ops']):.1f}, "
+             f"spatial x{b['spatial_peak']/max(1,a['spatial_peak']):.1f}, "
+             f"garbage x{b['garbage_peak']/max(1,a['garbage_peak']):.1f} "
+             f"(tasks x16)")
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only compile|sync|executor|roofline]
+
+Sections:
+  compile   — §5.1 Fig 6: compression vs projection dependence-compute time
+  sync      — §2 Table 2: overhead counters per synchronization model
+  executor  — §5.2: makespan comparison across models (+ threaded autodec)
+  roofline  — §Roofline terms from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "compile", "sync", "executor", "roofline"])
+    args = ap.parse_args(argv)
+
+    from . import (bench_compile, bench_executor, bench_roofline,
+                   bench_sync_overheads)
+
+    sections = {
+        "compile": bench_compile.run,
+        "sync": bench_sync_overheads.run,
+        "executor": bench_executor.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        sections = {args.only: sections[args.only]}
+    rc = 0
+    for name, fn in sections.items():
+        print(f"\n===== bench:{name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"# section {name} failed: {e!r}")
+            rc = 1
+        print(f"# bench:{name} took {time.time()-t0:.1f}s", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""Assigned architectures (exact configs) + input shapes + ShapeDtypeStruct specs.
+
+Each module defines CONFIG; the registry maps ``--arch <id>`` names to them.
+``input_specs(cfg, shape)`` builds allocation-free ShapeDtypeStruct stand-ins
+for the dry-run; ``applicable(cfg, shape)`` encodes the skip rules
+(long_500k needs a sub-quadratic path; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from . import (deepseek_v3_671b, granite_moe_1b_a400m, internvl2_26b,
+               llama3_2_1b, qwen2_5_3b, rwkv6_1_6b, smollm_360m,
+               starcoder2_3b, whisper_tiny, zamba2_7b)
+
+REGISTRY: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen2_5_3b, smollm_360m, llama3_2_1b, starcoder2_3b, zamba2_7b,
+              deepseek_v3_671b, granite_moe_1b_a400m, rwkv6_1_6b,
+              internvl2_26b, whisper_tiny)
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    s = SHAPES[shape]
+    if s.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: O(S^2) attention at 500k "
+                       "is intractable; skip per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def _text_len(cfg: ArchConfig, seq: int) -> int:
+    if cfg.frontend != "none":
+        return max(1, seq - cfg.frontend_seq)
+    return seq
+
+
+def input_specs(cfg: ArchConfig, shape: str, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens, labels [, extra_embeds]}
+    prefill: {tokens [, extra_embeds]}
+    decode:  {tokens1, pos}  (+ caches built separately via cache_specs)
+    """
+    s = SHAPES[shape]
+    B = s.global_batch
+    St = _text_len(cfg, s.seq_len)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if s.kind == "train":
+        out = {"tokens": sds((B, St), i32), "labels": sds((B, St), i32)}
+        if cfg.frontend != "none":
+            out["extra_embeds"] = sds((B, cfg.frontend_seq, cfg.d_model), dtype)
+        return out
+    if s.kind == "prefill":
+        out = {"tokens": sds((B, St), i32)}
+        if cfg.frontend != "none":
+            out["extra_embeds"] = sds((B, cfg.frontend_seq, cfg.d_model), dtype)
+        return out
+    # decode: one new token against a cache of seq_len
+    out = {"tokens1": sds((B, 1), i32), "pos": sds((), i32)}
+    if cfg.encdec:
+        out["enc_out"] = sds((B, cfg.frontend_seq, cfg.d_model), dtype)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: str, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode caches (mirrors models.init_cache)."""
+    s = SHAPES[shape]
+    model = _build(cfg)
+    caches = jax.eval_shape(
+        lambda: model.init_cache(s.global_batch, s.seq_len, dtype))
+    return caches
+
+
+def _build(cfg):
+    from ..models import build_model
+    return build_model(cfg)
+
+
+ARCH_NAMES = sorted(REGISTRY)
+SHAPE_NAMES = list(SHAPES)
+
+
+def all_cells():
+    """The 40 (arch × shape) cells with applicability flags."""
+    for a in ARCH_NAMES:
+        cfg = REGISTRY[a]
+        for sh in SHAPE_NAMES:
+            ok, why = applicable(cfg, sh)
+            yield a, sh, ok, why

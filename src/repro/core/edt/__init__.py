@@ -1,0 +1,20 @@
+"""Event-driven task graphs: construction (§3/§4), sync models (§2), execution."""
+from .executor import Counters, Gauge, Sim
+from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
+                         run_counted, run_model, run_prescribed, run_tags1,
+                         run_tags2, validate_order)
+from .taskgraph import (Dependence, MaterializedGraph, PolyhedralProgram,
+                        Statement, TaskId, TiledTaskGraph)
+from .threaded import ThreadedAutodec, run_graph_threaded
+from .wavefront import WavefrontSchedule, synthesize
+
+__all__ = [
+    "PolyhedralProgram", "Statement", "Dependence", "TiledTaskGraph",
+    "MaterializedGraph", "TaskId",
+    "Sim", "Counters", "Gauge",
+    "MODELS", "run_model", "RunResult", "validate_order",
+    "run_prescribed", "run_tags1", "run_tags2", "run_counted",
+    "run_autodec", "run_autodec_nosrc",
+    "ThreadedAutodec", "run_graph_threaded",
+    "WavefrontSchedule", "synthesize",
+]

@@ -1,0 +1,87 @@
+"""Emit the paper's generated-code forms (Figures 3, 4, 5) for inspection.
+
+The *executable* counterparts live in ``taskgraph.py`` (iterators) and
+``syncmodels.py`` (runtime behavior); this module renders the same polyhedra
+as human-readable pseudo-C so examples and docs can show exactly what the
+compiler "generates" for each synchronization model.
+"""
+from __future__ import annotations
+
+from ..poly import LoopNest
+from ..poly.counting import dims_to_params
+from .taskgraph import TiledTaskGraph
+
+
+def _dep_loop(graph: TiledTaskGraph, td, fix: str) -> str:
+    """Render the get ('src' fixed=target) or put ('tgt' fixed=source) loop."""
+    ns = graph.tilings[td.dep.src].ndim
+    if fix == "target":   # get loop: scan sources given my coords
+        fixed = list(range(ns, td.delta_t.ndim))
+    else:                 # put/autodec loop: scan targets given my coords
+        fixed = list(range(ns))
+    fam = dims_to_params(td.delta_t, fixed)
+    return LoopNest(fam).pretty_loops()
+
+
+def emit_prescribed(graph: TiledTaskGraph) -> str:
+    """Fig 3: task-creation loops + declarative dependence loops."""
+    out = ["// ---- prescribed model (Fig 3): master sets everything up ----"]
+    for name, nest in graph.tile_nests.items():
+        out.append(f"// create tasks of statement '{name}'")
+        out.append(nest.pretty_loops().replace("body(", f"task_init({name!r}, "))
+    for td in graph.tiled_deps:
+        out.append(f"// declare dependences {td.dep.name}")
+        out.append(LoopNest(td.delta_t).pretty_loops()
+                   .replace("body(", "declare_dependence("))
+    return "\n".join(out)
+
+
+def emit_tags(graph: TiledTaskGraph, method: int = 2) -> str:
+    """Fig 4: per-task gets on predecessors, puts for (self|successors)."""
+    out = [f"// ---- tags model, Method {method} (Fig 4) ----"]
+    for name in graph.program.statements:
+        out.append(f"task {name}(iT...):")
+        for td in graph._in[name]:
+            out.append(f"  // gets on {td.dep.name}")
+            for line in _dep_loop(graph, td, "target").splitlines()[:-1]:
+                out.append("  " + line)
+            out.append("    get(tag(src))" if method == 2
+                       else "    get(tag(src, iT))")
+        out.append("  compute(iT)")
+        if method == 2:
+            out.append("  put(tag(iT))")
+        else:
+            for td in graph._out[name]:
+                out.append(f"  // puts on {td.dep.name}")
+                for line in _dep_loop(graph, td, "source").splitlines()[:-1]:
+                    out.append("  " + line)
+                out.append("    put(tag(iT, tgt))")
+    return "\n".join(out)
+
+
+def emit_autodec(graph: TiledTaskGraph) -> str:
+    """Fig 5: pred-count function + autodec loop; master preschedules roots."""
+    out = ["// ---- autodec model (Fig 5) ----"]
+    strategies = graph.pred_count_strategies()
+    for name in graph.program.statements:
+        out.append(f"int pred_count_{name}(iT...):  // §4.3")
+        for td in graph._in[name]:
+            strat = strategies[td.dep.name]
+            out.append(f"  // {td.dep.name}: strategy = {strat}")
+            if strat == "enumerator":
+                out.append("  n += closed_form(iT)   // O(dims) evaluation")
+            else:
+                for line in _dep_loop(graph, td, "target").splitlines()[:-1]:
+                    out.append("  " + line)
+                out.append("    n++;")
+        out.append("  return n;")
+    for name in graph.program.statements:
+        out.append(f"task {name}(iT...):")
+        out.append("  compute(iT)")
+        for td in graph._out[name]:
+            out.append(f"  // autodec successors via {td.dep.name}")
+            for line in _dep_loop(graph, td, "source").splitlines()[:-1]:
+                out.append("  " + line)
+            out.append(f"    autodec(tgt, pred_count_{td.dep.tgt})")
+    out.append("// master: preschedule(t) for all t — O(1) sequential start-up")
+    return "\n".join(out)

@@ -1,0 +1,159 @@
+"""Instrumented event-driven execution substrate.
+
+Two execution backends:
+
+* :class:`Sim` — a deterministic discrete-event simulator with ``k`` worker
+  slots and a dedicated master lane.  All of the paper's §2 overhead metrics
+  are tracked *exactly* (they are object-lifetime counts, machine
+  independent), and the makespan gives the wall-time trends of §5.2 without
+  noise from the host (this container has a single core).
+
+* :class:`ThreadedAutodec` (in ``threaded.py``) — a real thread-pool runtime
+  for the autodec model, proving the atomic get-or-create under true
+  concurrency; it is also what the training runtime layer uses for async
+  orchestration (prefetch / checkpoint / straggler backups).
+
+Overhead gauges (paper Table 2):
+  ``startup``        sequential master ops before the first task can start
+  ``spatial``        live synchronization objects (edges / tags / counters)
+  ``inflight_tasks`` tasks known to the scheduler but not yet ready/running
+  ``inflight_deps``  unresolved dependence objects
+  ``garbage``        objects whose last use has passed but not yet destroyed
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class Gauge:
+    """Current value + high-water mark."""
+
+    __slots__ = ("cur", "peak", "total")
+
+    def __init__(self) -> None:
+        self.cur = 0
+        self.peak = 0
+        self.total = 0
+
+    def inc(self, k: int = 1) -> None:
+        self.cur += k
+        self.total += k
+        if self.cur > self.peak:
+            self.peak = self.cur
+
+    def dec(self, k: int = 1) -> None:
+        self.cur -= k
+
+
+@dataclass
+class Counters:
+    """The five Table-2 overheads + makespan, measured not asserted."""
+    startup_ops: int = 0
+    spatial: Gauge = field(default_factory=Gauge)
+    inflight_tasks: Gauge = field(default_factory=Gauge)
+    inflight_deps: Gauge = field(default_factory=Gauge)
+    garbage: Gauge = field(default_factory=Gauge)
+    makespan: float = 0.0
+    master_ops: int = 0
+
+    def summary(self) -> dict:
+        return {
+            "startup_ops": self.startup_ops,
+            "spatial_peak": self.spatial.peak,
+            "inflight_tasks_peak": self.inflight_tasks.peak,
+            "inflight_deps_peak": self.inflight_deps.peak,
+            "garbage_peak": self.garbage.peak,
+            "sync_objects_total": self.spatial.total,
+            "makespan": self.makespan,
+            "master_ops": self.master_ops,
+        }
+
+
+class Sim:
+    """Discrete-event simulator: ``workers`` task slots + 1 master lane.
+
+    The master runs a generator of setup *ops*; each op costs ``setup_cost``
+    time on the master lane.  Tasks cost ``task_dur`` and occupy a worker.
+    Models dispatch ready tasks via :meth:`make_ready`; whether tasks may
+    start before the master finishes is the model's choice (``gate``).
+    """
+
+    def __init__(self, workers: int = 4, task_dur: float = 1.0,
+                 setup_cost: float = 0.01):
+        self.workers = workers
+        self.task_dur = task_dur
+        self.setup_cost = setup_cost
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.free = workers
+        self.ready: list = []  # FIFO of (task_key, run_fn)
+        self.gate_open = True
+        self.counters = Counters()
+        self._started_any = False
+        self.exec_order: list = []
+        self.running = 0
+
+    # ---------------------------------------------------------------- events
+    def at(self, dt: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (self.now + dt, next(self._seq), fn))
+
+    def run(self) -> None:
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        self.counters.makespan = self.now
+
+    # ---------------------------------------------------------------- master
+    def run_master(self, ops, gate_after_all: bool) -> None:
+        """Schedule master setup ops; optionally gate task execution on them.
+
+        ``ops`` is an iterable of callables.  With ``gate_after_all`` the gate
+        opens only when every op has run (prescribed / counted models); the
+        number of ops before the gate opens is the sequential start-up
+        overhead.  Without it the gate is open from the start (tags /
+        autodec): setup overlaps execution.
+        """
+        ops = list(ops)
+        self.gate_open = not gate_after_all
+        n = len(ops)
+        self.counters.master_ops += n
+        self.counters.startup_ops += n if gate_after_all else min(1, n)
+
+        def step(i: int) -> None:
+            if i < n:
+                ops[i]()
+                self.at(self.setup_cost, lambda: step(i + 1))
+            else:
+                if gate_after_all:
+                    self.gate_open = True
+                    self._dispatch()
+
+        self.at(0.0, lambda: step(0))
+
+    # ---------------------------------------------------------------- tasks
+    def make_ready(self, key, run_fn: Callable[[], None]) -> None:
+        self.ready.append((key, run_fn))
+        self._dispatch()
+
+    def _dispatch(self) -> None:
+        if not self.gate_open:
+            return
+        while self.free > 0 and self.ready:
+            key, run_fn = self.ready.pop(0)
+            self.free -= 1
+            self.running += 1
+            self.exec_order.append(key)
+            self._started_any = True
+
+            def complete(run_fn=run_fn) -> None:
+                run_fn()
+                self.free += 1
+                self.running -= 1
+                self._dispatch()
+
+            self.at(self.task_dur, complete)

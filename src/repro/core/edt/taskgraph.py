@@ -1,0 +1,292 @@
+"""Polyhedral programs → tiled event-driven task graphs.
+
+A :class:`PolyhedralProgram` is a set of statements (iteration domains) and
+dependence polyhedra between them.  :class:`TiledTaskGraph` applies per-
+statement tilings, computes the inter-tile dependences with the paper's
+compression method (§3, never projection), and exposes the generated-code
+primitives of §4:
+
+  * the tile iteration domain per statement (the task creation loop, Fig 3),
+  * ``successors`` / ``predecessors`` iterators (the put / get loops, Fig 4),
+  * ``pred_count`` — the §4.3 predecessor-count function (autodec init),
+  * ``roots`` — the set of tasks without predecessors (master's preschedule
+    loop), via destination-projection + subtraction as in §4.3.
+
+Consistency rule (deadlock freedom under over-approximation): the effective
+inter-tile dependence is ``Δ_T ∩ (tiledom_src × tiledom_tgt)`` and *all*
+generated loops (get / put / count) read the same polyhedron, so a dependence
+is counted iff it will be signaled.  Tile-level self-pairs (T,T) of a
+statement are excluded everywhere: intra-tile deps are satisfied by sequential
+execution inside the task.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Iterator, Optional, Sequence
+
+from ..poly import (CountingFunction, LoopNest, Polyhedron, Tiling,
+                    make_counting_function, project_onto, tile_dependence,
+                    tile_domain)
+from ..poly.counting import dims_to_params
+
+TaskId = tuple[str, tuple[int, ...]]  # (statement name, tile coords)
+
+
+@dataclass(frozen=True)
+class Statement:
+    name: str
+    domain: Polyhedron  # iteration domain (params allowed)
+
+    @property
+    def ndim(self) -> int:
+        return self.domain.ndim
+
+
+@dataclass(frozen=True)
+class Dependence:
+    """Pre-tiling dependence polyhedron over (src dims, tgt dims)."""
+    src: str
+    tgt: str
+    delta: Polyhedron  # dims = src.ndim + tgt.ndim
+    src_ndim: int
+    name: str = ""
+
+
+@dataclass
+class PolyhedralProgram:
+    statements: dict[str, Statement] = field(default_factory=dict)
+    dependences: list[Dependence] = field(default_factory=list)
+    param_names: tuple[str, ...] = ()
+
+    def add_statement(self, name: str, domain: Polyhedron) -> Statement:
+        st = Statement(name, domain)
+        self.statements[name] = st
+        if not self.param_names:
+            self.param_names = domain.param_names
+        assert domain.param_names == self.param_names, \
+            "all statements must share the parameter list"
+        return st
+
+    def add_dependence(self, src: str, tgt: str, delta: Polyhedron,
+                       name: str = "") -> Dependence:
+        s = self.statements[src]
+        assert delta.ndim == s.ndim + self.statements[tgt].ndim
+        d = Dependence(src, tgt, delta, s.ndim, name or f"{src}->{tgt}")
+        self.dependences.append(d)
+        return d
+
+
+@dataclass
+class _TiledDep:
+    dep: Dependence
+    delta_t: Polyhedron          # effective inter-tile dependence
+    # successor loop: fix source tile coords (as params) -> iterate targets
+    succ_fn: CountingFunction
+    # predecessor loop / §4.3 count function: fix target tile -> iterate sources
+    pred_fn: CountingFunction
+
+
+class TiledTaskGraph:
+    """Tile-level EDT graph with paper-§4 generated-code primitives."""
+
+    def __init__(self, program: PolyhedralProgram,
+                 tilings: dict[str, Tiling],
+                 method: str = "inflate"):
+        self.program = program
+        self.tilings = tilings
+        self.method = method
+        self.param_names = program.param_names
+
+        # Tile iteration domains (task creation loops, Fig 3).
+        self.tile_domains: dict[str, Polyhedron] = {}
+        self.tile_nests: dict[str, LoopNest] = {}
+        for name, st in program.statements.items():
+            td = tile_domain(st.domain, tilings[name], method=method)
+            self.tile_domains[name] = td
+            self.tile_nests[name] = LoopNest(td)
+
+        # Inter-tile dependences by compression (§3), intersected with the
+        # product of tile domains for signal/count consistency.
+        self.tiled_deps: list[_TiledDep] = []
+        self._out: dict[str, list[_TiledDep]] = {n: [] for n in program.statements}
+        self._in: dict[str, list[_TiledDep]] = {n: [] for n in program.statements}
+        for dep in program.dependences:
+            gs = tilings[dep.src]
+            gt = tilings[dep.tgt]
+            dt = tile_dependence(dep.delta, dep.src_ndim, gs, gt, method=method)
+            ns = gs.ndim
+            src_td = self.tile_domains[dep.src]
+            tgt_td = self.tile_domains[dep.tgt]
+            prod = (src_td.add_dims(tgt_td.dim_names)
+                    .intersect(tgt_td.add_dims(src_td.dim_names, front=True)
+                               .rename(dim_names=src_td.dim_names + tgt_td.dim_names)))
+            # align dim names before intersecting
+            dt = dt.rename(dim_names=src_td.dim_names + tgt_td.dim_names)
+            eff = dt.intersect(prod)
+            src_dims = list(range(ns))
+            tgt_dims = list(range(ns, eff.ndim))
+            td = _TiledDep(
+                dep=dep,
+                delta_t=eff,
+                succ_fn=make_counting_function(eff, count_dims=tgt_dims,
+                                               fixed_dims=src_dims),
+                pred_fn=make_counting_function(eff, count_dims=src_dims,
+                                               fixed_dims=tgt_dims),
+            )
+            self.tiled_deps.append(td)
+            self._out[dep.src].append(td)
+            self._in[dep.tgt].append(td)
+
+    # ------------------------------------------------------------- tasks
+    def tasks(self, params: dict[str, int]) -> Iterator[TaskId]:
+        """All tasks: the task-creation loops of Fig 3."""
+        pv = self._pv(params)
+        for name in self.program.statements:
+            for t in self.tile_nests[name].iterate(pv):
+                yield (name, t)
+
+    def num_tasks(self, params: dict[str, int]) -> int:
+        pv = self._pv(params)
+        return sum(self.tile_nests[n].count(pv) for n in self.program.statements)
+
+    # -------------------------------------------------- generated loops (§4)
+    def successors(self, task: TaskId, params: dict[str, int]) -> Iterator[TaskId]:
+        """The put/autodec loop of task: every (dep, tgt) pair, self excluded."""
+        name, t = task
+        pv = self._pv(params)
+        for td in self._out[name]:
+            same = td.dep.src == td.dep.tgt
+            for tgt in td.succ_fn.points(t, pv):
+                if same and tuple(tgt) == tuple(t):
+                    continue
+                yield (td.dep.tgt, tuple(tgt))
+
+    def predecessors(self, task: TaskId, params: dict[str, int]) -> Iterator[TaskId]:
+        """The get loop of the task (Fig 4)."""
+        name, t = task
+        pv = self._pv(params)
+        for td in self._in[name]:
+            same = td.dep.src == td.dep.tgt
+            for src in td.pred_fn.points(t, pv):
+                if same and tuple(src) == tuple(t):
+                    continue
+                yield (td.dep.src, tuple(src))
+
+    def pred_count(self, task: TaskId, params: dict[str, int]) -> int:
+        """§4.3 predecessor-count function (counts (dep, src-tile) pairs)."""
+        name, t = task
+        pv = self._pv(params)
+        total = 0
+        for td in self._in[name]:
+            c = td.pred_fn(t, pv)
+            if td.dep.src == td.dep.tgt and td.delta_t.contains_point(
+                    tuple(t) + tuple(t), pv):
+                c -= 1  # exclude the tile-level self pair
+            total += c
+        return total
+
+    def pred_count_strategies(self) -> dict[str, str]:
+        """Which counting form §4.3's heuristic chose, per dependence."""
+        return {td.dep.name: td.pred_fn.strategy for td in self.tiled_deps}
+
+    # ------------------------------------------------------------- roots
+    def roots_polyhedra(self) -> dict[str, list[Polyhedron]]:
+        """§4.3: project each Δ_T onto destination dims.
+
+        The set of tasks *with* predecessors per statement; roots = tile
+        domain minus their union (set difference is evaluated pointwise since
+        the difference is generally non-convex).
+        """
+        out: dict[str, list[Polyhedron]] = {n: [] for n in self.program.statements}
+        for td in self.tiled_deps:
+            ns = self.tilings[td.dep.src].ndim
+            tgt_dims = list(range(ns, td.delta_t.ndim))
+            if td.dep.src == td.dep.tgt:
+                # self-dependences: a task with only its self-pair is a root;
+                # handled pointwise in roots() via pred_count.
+                pass
+            proj = project_onto(td.delta_t, tgt_dims)
+            out[td.dep.tgt].append(proj)
+        return out
+
+    def roots(self, params: dict[str, int]) -> Iterator[TaskId]:
+        """Tasks with no predecessors (the master's scan, made O(1)-startup by
+        preschedule in the autodec model)."""
+        with_preds = self.roots_polyhedra()
+        pv = self._pv(params)
+        for name in self.program.statements:
+            projs = with_preds[name]
+            for t in self.tile_nests[name].iterate(pv):
+                if any(p.contains_point(t, pv) for p in projs):
+                    # may still be a root if the only "predecessor" was the
+                    # self pair; fall back to the exact count.
+                    if self.pred_count((name, t), params) == 0:
+                        yield (name, t)
+                else:
+                    yield (name, t)
+
+    # ------------------------------------------------------------ materialize
+    def materialize(self, params: dict[str, int]) -> "MaterializedGraph":
+        """Explicit adjacency (for tests / the prescribed model / wavefronts)."""
+        tasks = list(self.tasks(params))
+        succ: dict[TaskId, list[TaskId]] = {t: [] for t in tasks}
+        pred_n: dict[TaskId, int] = {t: 0 for t in tasks}
+        for t in tasks:
+            for s in self.successors(t, params):
+                succ[t].append(s)
+                pred_n[s] += 1
+        return MaterializedGraph(tasks, succ, pred_n)
+
+    def _pv(self, params: dict[str, int]) -> list[int]:
+        return [params[n] for n in self.param_names]
+
+
+@dataclass
+class MaterializedGraph:
+    tasks: list[TaskId]
+    succ: dict[TaskId, list[TaskId]]
+    pred_n: dict[TaskId, int]
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(v) for v in self.succ.values())
+
+    def check_acyclic(self) -> bool:
+        indeg = dict(self.pred_n)
+        ready = [t for t in self.tasks if indeg[t] == 0]
+        seen = 0
+        while ready:
+            t = ready.pop()
+            seen += 1
+            for s in self.succ[t]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        return seen == len(self.tasks)
+
+    def wavefronts(self) -> list[list[TaskId]]:
+        """Earliest-start levels (longest-path depth) — the static schedule."""
+        indeg = dict(self.pred_n)
+        level = {t: 0 for t in self.tasks}
+        cur = [t for t in self.tasks if indeg[t] == 0]
+        out: list[list[TaskId]] = []
+        while cur:
+            out.append(sorted(cur))
+            nxt = []
+            for t in cur:
+                for s in self.succ[t]:
+                    indeg[s] -= 1
+                    level[s] = max(level[s], level[t] + 1)
+                    if indeg[s] == 0:
+                        nxt.append(s)
+            cur = nxt
+        assert sum(len(w) for w in out) == len(self.tasks), "graph has a cycle"
+        return out
+
+    def max_ready(self) -> int:
+        """r = max tasks simultaneously ready in the greedy wavefront execution."""
+        return max((len(w) for w in self.wavefronts()), default=0)
+
+    def max_out_degree(self) -> int:
+        return max((len(v) for v in self.succ.values()), default=0)

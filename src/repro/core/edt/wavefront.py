@@ -1,0 +1,111 @@
+"""Static wavefront schedule synthesis — the TPU-side realization of EDT.
+
+XLA programs cannot spawn tasks dynamically, so on-device we resolve the
+autodec counters *at compile time*: every task's earliest start level
+(longest-path depth in the tile graph) becomes its wavefront index, and the
+whole graph lowers to a loop over wavefronts in which all tasks of a level run
+in parallel (data parallel across tiles / pipeline stages).  This is the
+"overhead → 0" limit of the paper's Table 2: zero runtime sync objects,
+because the dependence relation was exact at compile time.
+
+For uniform dependences (constant distance vectors — pipelines, stencils) the
+wavefront index also has a closed affine form; we derive it when possible so
+huge tile spaces never need materializing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Optional, Sequence
+
+from .taskgraph import TaskId, TiledTaskGraph
+
+
+@dataclass
+class WavefrontSchedule:
+    levels: list[list[TaskId]]
+    level_of: dict[TaskId, int]
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def max_width(self) -> int:
+        return max((len(l) for l in self.levels), default=0)
+
+    def stats(self) -> dict:
+        n = sum(len(l) for l in self.levels)
+        return {"tasks": n, "depth": self.depth, "max_width": self.max_width,
+                "avg_width": n / max(1, self.depth)}
+
+
+def synthesize(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
+    """Longest-path leveling of the materialized tile graph."""
+    g = graph.materialize(params)
+    indeg = dict(g.pred_n)
+    level = {t: 0 for t in g.tasks}
+    cur = sorted(t for t in g.tasks if indeg[t] == 0)
+    levels: list[list[TaskId]] = []
+    placed = 0
+    while cur:
+        levels.append(cur)
+        placed += len(cur)
+        nxt = set()
+        for t in cur:
+            for s in g.succ[t]:
+                indeg[s] -= 1
+                level[s] = max(level[s], level[t] + 1)
+                if indeg[s] == 0:
+                    nxt.add(s)
+        cur = sorted(nxt)
+    assert placed == len(g.tasks), "cycle in task graph"
+    # re-bucket by longest-path level (Kahn order may under-level)
+    buckets: dict[int, list[TaskId]] = {}
+    for t, l in level.items():
+        buckets.setdefault(l, []).append(t)
+    levels = [sorted(buckets[l]) for l in sorted(buckets)]
+    return WavefrontSchedule(levels, level)
+
+
+def uniform_distance_vectors(graph: TiledTaskGraph) -> Optional[list[tuple]]:
+    """If every tiled dependence is a constant shift T_t = T_s + d, return the
+    distance vectors; else None.  (Pipelines and stencils are uniform.)"""
+    out = []
+    for td in graph.tiled_deps:
+        ns = graph.tilings[td.dep.src].ndim
+        nt = td.delta_t.ndim - ns
+        if ns != nt or td.dep.src != td.dep.tgt:
+            return None
+        d = [None] * ns
+        # look for equalities  T_t[i] - T_s[i] = d_i
+        for e in td.delta_t.eqs:
+            for i in range(ns):
+                if (e[ns + i] != 0 and e[i] == -e[ns + i]
+                        and all(e[j] == 0 for j in range(td.delta_t.ndim)
+                                if j not in (i, ns + i))
+                        and all(e[td.delta_t.ndim + p] == 0
+                                for p in range(td.delta_t.nparam))):
+                    d[i] = Fraction(e[-1], e[ns + i])
+        if any(x is None for x in d):
+            return None
+        out.append(tuple(int(-x) if x == int(x) else None for x in d))
+        if any(x is None for x in out[-1]):
+            return None
+    return out
+
+
+def closed_form_level(graph: TiledTaskGraph) -> Optional[callable]:
+    """For single-statement graphs with uniform nonnegative-lex distance
+    vectors, the wavefront index is the classic hyperplane schedule
+    t(T) = sum_i w_i T_i with w from the distances.  Returns a callable
+    T -> level, or None when not applicable."""
+    ds = uniform_distance_vectors(graph)
+    if ds is None or not ds:
+        return None
+    ndim = len(ds[0])
+    # weights: smallest positive integer combination covering all distances;
+    # use w_i = 1 when all distances are >= 0 and each has sum >= 1.
+    if all(all(c >= 0 for c in d) and sum(d) >= 1 for d in ds):
+        return lambda T: sum(T)
+    return None

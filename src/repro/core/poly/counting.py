@@ -1,0 +1,101 @@
+"""Predecessor-count functions (paper §4.3).
+
+With autodecs, the first predecessor to reach a successor task must initialize
+its counted dependence with the *exact* number of predecessors.  The paper
+generates, per dependence polyhedron, a function
+
+    pred_count(T_target, params) -> int
+
+in one of two forms, chosen by a shape heuristic:
+
+  * an **enumerator** — a closed-form product evaluated in O(n) (cheap, but
+    only valid for rectangular get-loops),
+  * a **counting loop** — scan the get-loop and count (shape-insensitive, cost
+    proportional to the count).
+
+We realize both: the target tile coordinates are moved into the *parameter*
+space of the polyhedron, so the per-level Fourier-Motzkin systems are computed
+once at "compile time", and each call is a cheap bound evaluation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Callable, Sequence
+
+from .polyhedron import Polyhedron
+from .scanning import LoopNest
+
+F0 = Fraction(0)
+
+
+def dims_to_params(poly: Polyhedron, dim_idx: Sequence[int]) -> Polyhedron:
+    """Reclassify the given dims as parameters (appended after existing params).
+
+    The polyhedron's point set is unchanged; only the scanning/counting role
+    of the coordinates changes.  Used to turn Δ_T(T_s, T_t) into a family of
+    source sets parameterized by the target tile.
+    """
+    dim_idx = sorted(set(dim_idx))
+    keep = [i for i in range(poly.ndim) if i not in dim_idx]
+
+    def conv(row):
+        body = [row[i] for i in keep]
+        params = list(row[poly.ndim:poly.ndim + poly.nparam])
+        moved = [row[i] for i in dim_idx]
+        return tuple(body + params + moved + [row[-1]])
+
+    return Polyhedron(tuple(poly.dim_names[i] for i in keep),
+                      poly.param_names + tuple(poly.dim_names[i] for i in dim_idx),
+                      tuple(conv(r) for r in poly.ineqs),
+                      tuple(conv(r) for r in poly.eqs)).canonical()
+
+
+@dataclass
+class CountingFunction:
+    """Callable predecessor/successor counter with a recorded strategy."""
+    nest: LoopNest
+    strategy: str  # 'enumerator' | 'loop'
+    # param order of nest: original params then fixed-dim coordinates.
+
+    def __call__(self, coords: Sequence[int], params: Sequence[int] = ()) -> int:
+        pv = list(params) + list(coords)
+        if self.strategy == "enumerator":
+            return self._enumerate(pv)
+        return self.nest.count(pv)
+
+    def _enumerate(self, pv) -> int:
+        """O(n) closed form — valid only for rectangular nests."""
+        if not self.nest.feasible(pv):
+            return 0
+        total = 1
+        for level in self.nest.levels:
+            lb, ub = self.nest._bounds(level, [0] * level.k, pv)
+            if lb is None or ub is None:
+                raise ValueError("unbounded dim in enumerator")
+            if ub < lb:
+                return 0
+            total *= ub - lb + 1
+        return total
+
+    def points(self, coords: Sequence[int], params: Sequence[int] = ()):
+        """Iterate the counted set (the paper's get/put/autodec loop body)."""
+        return self.nest.iterate(list(params) + list(coords))
+
+
+def make_counting_function(delta_t: Polyhedron, count_dims: Sequence[int],
+                           fixed_dims: Sequence[int],
+                           strategy: str = "auto") -> CountingFunction:
+    """Build ``count(fixed_coords, params) -> |{count_dims points}|``.
+
+    ``count_dims``/``fixed_dims`` partition the dims of ``delta_t``.
+    For a predecessor counter on Δ_T(T_s, T_t): count_dims = source dims,
+    fixed_dims = target dims.  Strategy 'auto' applies the paper's heuristic:
+    rectangular nest -> enumerator, else counting loop.
+    """
+    assert sorted(list(count_dims) + list(fixed_dims)) == list(range(delta_t.ndim))
+    fam = dims_to_params(delta_t, fixed_dims)
+    nest = LoopNest(fam)
+    if strategy == "auto":
+        strategy = "enumerator" if nest.is_rectangular() else "loop"
+    return CountingFunction(nest=nest, strategy=strategy)

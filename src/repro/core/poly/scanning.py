@@ -1,0 +1,229 @@
+"""Lexicographic scanning of integer points — the paper's generated loops.
+
+The paper's codegen (§4) turns dependence polyhedra into loop nests that scan
+predecessors/successors of a task (get/put/autodec loops).  Here a
+:class:`LoopNest` plays that role: it precomputes, per loop level, the
+Fourier-Motzkin projection of the polyhedron onto the outer dims, so that at
+"run time" (task execution) each level's bounds are cheap affine min/max
+evaluations — exactly like generated C loop bounds.
+
+Scanning is exact over the integers: level-k bounds come from the rational
+projection, and integer-empty inner ranges simply produce empty loops.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Iterator, Optional, Sequence
+
+from .polyhedron import Polyhedron
+from .projection import project_out
+
+F0 = Fraction(0)
+
+
+@dataclass
+class _Level:
+    """Bounds for one loop dim: rows over [outer dims..., this dim, params, 1].
+
+    The level-k system has k+1 dims (outer dims + this one); parameters start
+    at column k+1.
+    """
+    lowers: list[tuple]   # a_k > 0 rows: d_k >= ceil(-(rest)/a_k)
+    uppers: list[tuple]   # a_k < 0 rows: d_k <= floor(rest/(-a_k))
+    k: int
+
+    @property
+    def param_off(self) -> int:
+        return self.k + 1
+
+
+class LoopNest:
+    """Scan the integer points of ``poly`` in lexicographic dim order."""
+
+    def __init__(self, poly: Polyhedron, simplify: str = "auto"):
+        self.poly = poly.canonical()
+        self.ndim = poly.ndim
+        self.nparam = poly.nparam
+        self.levels: list[_Level] = []
+        self._infeasible = False
+        # guards: rows with no dim support (pure parameter constraints);
+        # they surface in the outermost projected system and must be checked
+        # at evaluation time or infeasible parameter values scan garbage.
+        self._guards: list[tuple] = []
+        cur = self.poly
+        systems = [None] * self.ndim
+        for k in range(self.ndim - 1, -1, -1):
+            systems[k] = cur
+            if k > 0:
+                cur = project_out(cur, [k], simplify=simplify)
+        if self.ndim == 0:
+            self._guards = list(self.poly.all_rows_as_ineqs())
+            return
+        for k in range(self.ndim):
+            sys_k = systems[k]
+            rows = sys_k.all_rows_as_ineqs()
+            lowers, uppers = [], []
+            for r in rows:
+                c = r[k]
+                if c > 0:
+                    lowers.append(r)
+                elif c < 0:
+                    uppers.append(r)
+                elif k == 0:
+                    # pure-parameter guard (dim coeff 0 in the 1-dim system)
+                    if all(x == 0 for x in r[:-1]):
+                        if r[-1] < 0:
+                            self._infeasible = True
+                    else:
+                        self._guards.append(r)
+            self.levels.append(_Level(lowers, uppers, k))
+
+    def feasible(self, params) -> bool:
+        """Evaluate the pure-parameter guards."""
+        if self._infeasible:
+            return False
+        pv = self._param_vec(params)
+        off = 1 if self.ndim else 0
+        for r in self._guards:
+            v = r[-1]
+            for j in range(self.nparam):
+                v += r[off + j] * pv[j]
+            if v < 0:
+                return False
+        return True
+
+    # ------------------------------------------------------------------ eval
+    def _bounds(self, level: _Level, prefix: list[int],
+                params: Sequence[int]) -> tuple[Optional[int], Optional[int]]:
+        """Integer [lb, ub] for dim k given outer values; None = unbounded."""
+        k = level.k
+        off = level.param_off
+        lb: Optional[int] = None
+        ub: Optional[int] = None
+        for r in level.lowers:
+            a = r[k]
+            rest = r[-1]
+            for j in range(k):
+                rest += r[j] * prefix[j]
+            for j in range(self.nparam):
+                rest += r[off + j] * params[j]
+            v = math.ceil(Fraction(-rest, 1) / a)
+            lb = v if lb is None else max(lb, v)
+        for r in level.uppers:
+            a = -r[k]
+            rest = r[-1]
+            for j in range(k):
+                rest += r[j] * prefix[j]
+            for j in range(self.nparam):
+                rest += r[off + j] * params[j]
+            v = math.floor(Fraction(rest, 1) / a)
+            ub = v if ub is None else min(ub, v)
+        return lb, ub
+
+    def iterate(self, params: dict[str, int] | Sequence[int] = ()) -> Iterator[tuple[int, ...]]:
+        """Yield every integer point (requires bounded dims)."""
+        if not self.feasible(params):
+            return
+        pv = self._param_vec(params)
+        if self.ndim == 0:
+            yield ()
+            return
+        yield from self._rec(0, [], pv)
+
+    def _rec(self, k: int, prefix: list[int], pv) -> Iterator[tuple[int, ...]]:
+        if k == self.ndim:
+            yield tuple(prefix)
+            return
+        lb, ub = self._bounds(self.levels[k], prefix, pv)
+        if lb is None or ub is None:
+            raise ValueError(f"dim {k} ({self.poly.dim_names[k]}) is unbounded")
+        for v in range(lb, ub + 1):
+            prefix.append(v)
+            yield from self._rec(k + 1, prefix, pv)
+            prefix.pop()
+
+    def count(self, params: dict[str, int] | Sequence[int] = ()) -> int:
+        """Number of integer points (innermost level counted closed-form)."""
+        if not self.feasible(params):
+            return 0
+        pv = self._param_vec(params)
+        if self.ndim == 0:
+            return 1
+        return self._count_rec(0, [], pv)
+
+    def _count_rec(self, k: int, prefix: list[int], pv) -> int:
+        lb, ub = self._bounds(self.levels[k], prefix, pv)
+        if lb is None or ub is None:
+            raise ValueError(f"dim {k} is unbounded; cannot count")
+        if ub < lb:
+            return 0
+        if k == self.ndim - 1:
+            return ub - lb + 1
+        total = 0
+        for v in range(lb, ub + 1):
+            prefix.append(v)
+            total += self._count_rec(k + 1, prefix, pv)
+            prefix.pop()
+        return total
+
+    def first(self, params=()) -> Optional[tuple[int, ...]]:
+        return next(self.iterate(params), None)
+
+    def is_empty_at(self, params=()) -> bool:
+        return self.first(params) is None
+
+    # ------------------------------------------------------------- structure
+    def is_rectangular(self) -> bool:
+        """True if every level's bounds are independent of outer dims.
+
+        This is the shape heuristic of §4.3: rectangular nests admit an O(n)
+        closed-form enumerator; ragged ones are counted by scanning.
+        """
+        for level in self.levels:
+            for r in level.lowers + level.uppers:
+                if any(r[j] != 0 for j in range(level.k)):
+                    return False
+        return True
+
+    def _param_vec(self, params) -> list[int]:
+        if isinstance(params, dict):
+            return [params[n] for n in self.poly.param_names]
+        pv = list(params)
+        assert len(pv) == self.nparam, \
+            f"expected {self.nparam} params {self.poly.param_names}, got {pv}"
+        return pv
+
+    # ---------------------------------------------------------------- codegen
+    def pretty_loops(self) -> str:
+        """Human-readable pseudo-C of the generated loop nest (docs/debug)."""
+        lines = []
+        names = self.poly.dim_names
+        pnames = self.poly.param_names
+
+        def expr(r, k, flip):
+            terms = []
+            for j in range(k):
+                c = -r[j] if not flip else r[j]
+                if c:
+                    terms.append(f"{'+' if c > 0 else ''}{c}*{names[j]}")
+            for j in range(self.nparam):
+                c = r[k + 1 + j]
+                c = -c if not flip else c
+                if c:
+                    terms.append(f"{'+' if c > 0 else ''}{c}*{pnames[j]}")
+            c = -r[-1] if not flip else r[-1]
+            if c or not terms:
+                terms.append(f"{'+' if c > 0 else ''}{c}")
+            return " ".join(terms)
+
+        for level in self.levels:
+            k = level.k
+            lbs = [f"ceild({expr(r, k, False)}, {r[k]})" for r in level.lowers]
+            ubs = [f"floord({expr(r, k, True)}, {-r[k]})" for r in level.uppers]
+            lb = lbs[0] if len(lbs) == 1 else "max(" + ", ".join(lbs) + ")"
+            ub = ubs[0] if len(ubs) == 1 else "min(" + ", ".join(ubs) + ")"
+            lines.append("  " * k + f"for ({names[k]} = {lb}; {names[k]} <= {ub}; {names[k]}++)")
+        lines.append("  " * self.ndim + "body(" + ", ".join(names) + ");")
+        return "\n".join(lines)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated on CPU in interpret mode vs ref.py oracles)."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode automatically; on
+TPU they compile to Mosaic.  Layout adapters live here so model code can stay
+in its natural [B, S, H, D] layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_hm
+from .ssd import ssd_pallas
+from .wkv6 import wkv6_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    bq: int = 128, bk: int = 128):
+    """q [B,Sq,H,D], k/v [B,Skv,Hkv,D] -> [B,Sq,H,D] (GQA-aware)."""
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = flash_attention_hm(qh, kh, vh, causal=causal, bq=bq, bk=bk,
+                             interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv6(r, k, v, w, u, init_state=None, *, chunk: int = 64):
+    """RWKV6 recurrence: r,k,v,w [B,S,H,D], u [H,D] -> (out, state)."""
+    return wkv6_pallas(r, k, v, w, u, init_state, chunk=chunk,
+                       interpret=_interpret())
+
+
+def ssd(x, dt, A, Bm, Cm, init_state=None, *, chunk: int = 128):
+    """Mamba2 SSD: x [B,S,H,P], dt [B,S,H], A [H], Bm/Cm [B,S,N]."""
+    return ssd_pallas(x, dt, A, Bm, Cm, init_state, chunk=chunk,
+                      interpret=_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are deliberately naive/direct implementations — the ground truth the
+kernels are validated against (interpret mode on CPU, shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q [B,Sq,H,D], k/v [B,Skv,Hkv,D] (GQA by grouping). Direct softmax."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, v.shape[-1]
+                                                ).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, init_state=None):
+    """RWKV6 recurrence, step by step (the definition).
+
+    r,k,v,w: [B,S,H,D]; u: [H,D]; state [B,H,D,D] (key-major outer products).
+      out[t] = r_t . (state + u * (k_t ⊗ v_t));  state = w_t*state + k_t ⊗ v_t
+    Returns (out [B,S,H,D], final_state).
+    """
+    B, S, H, D = r.shape
+    state = (init_state if init_state is not None
+             else jnp.zeros((B, H, D, D), jnp.float32))
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    outs = []
+    for t in range(S):
+        kv = kf[:, t, :, :, None] * vf[:, t, :, None, :]
+        outs.append(jnp.einsum("bhd,bhde->bhe", rf[:, t],
+                               state + u[None, :, :, None] * kv))
+        state = wf[:, t][..., None] * state + kv
+    return jnp.stack(outs, axis=1).astype(r.dtype), state
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Mamba2 SSD recurrence, step by step (the definition).
+
+    x [B,S,H,P], dt [B,S,H] (>=0), A [H] (negative), Bm/Cm [B,S,N].
+      state = exp(dt_t A) * state + dt_t * (x_t ⊗ B_t);   y_t = C_t . state
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state = (init_state if init_state is not None
+             else jnp.zeros((B, H, P, N), jnp.float32))
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dtf[:, t] * A[None, :])             # [B,H]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtf[:, t], xf[:, t], Bf[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cf[:, t], state))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state

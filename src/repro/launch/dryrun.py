@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the first import side effect: the XLA_FLAGS above create 512 host
+placeholder devices before jax locks the device count (hence the unusual
+module layout — do not move the docstring above the env mutation).
+
+For each cell this driver:
+  1. builds the model + step function (train / prefill / decode),
+  2. computes parameter/optimizer/input shardings from repro.parallel rules,
+  3. ``jit(...).lower(ShapeDtypeStructs).compile()`` under the mesh,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` and the collective
+     operand bytes parsed from the compiled HLO into
+     ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` (§Dry-run, §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (REGISTRY, SHAPES, applicable, get_config, input_specs)
+from ..models import ParallelCtx, build_model
+from ..optim import AdamWConfig, init_state
+from ..parallel.sharding import (batch_specs, cache_specs_tree, dp_axes,
+                                 opt_state_specs, param_specs, to_named)
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+from .steps import make_decode_step, make_prefill_step, make_train_step
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in post-SPMD HLO."""
+    out = {c: 0 for c in COLLECTIVES}
+    count = {c: 0 for c in COLLECTIVES}
+    # lines look like:  %all-reduce.5 = f32[1024,512]{1,0} all-reduce(...)
+    shape_re = re.compile(r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
+                   "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                   "f8e5m2": 1, "c64": 8}
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVES:
+            if f" {c}(" in line or f" {c}-start(" in line:
+                m = shape_re.search(line)
+                if not m:
+                    continue
+                dt, dims = m.group(1), m.group(2)
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                out[c] += n * dtype_bytes.get(dt, 4)
+                count[c] += 1
+                break
+    return {"bytes": out, "counts": count,
+            "total_bytes": sum(out.values())}
+
+
+def _mem_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                            None),
+            "peak_bytes": (getattr(ma, "temp_size_in_bytes", 0) or 0) +
+                          (getattr(ma, "argument_size_in_bytes", 0) or 0) +
+                          (getattr(ma, "output_size_in_bytes", 0) or 0),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_summary(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+                "optimal_seconds": ca.get("optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def build_cell(arch: str, shape: str, mesh, *, opt_bits: int = 0,
+               extra_cfg: dict | None = None, microbatches: int = 1):
+    """Returns (jitted_fn, example_args_SDS) for the cell, ready to lower.
+
+    opt_bits=0 means auto: 8-bit moment states when f32 states would not fit
+    the 16 GB/chip budget (params*10B/chip > 12 GB), else f32.
+    """
+    cfg = get_config(arch)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    if opt_bits == 0:
+        opt_bits = 8 if cfg.n_params() * 10 / mesh.size > 12e9 else 32
+    sspec = SHAPES[shape]
+    model = build_model(cfg)
+    dps = dp_axes(mesh)
+    dp = dps if len(dps) > 1 else dps[0]
+    ctx = ParallelCtx(ep_axis="model", ep_size=mesh.shape["model"],
+                      mesh=mesh, dp_spec=dp)
+
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16), key)
+    pspecs = param_specs(p_shapes, mesh)
+    in_sds = input_specs(cfg, shape)
+    bspecs = batch_specs(in_sds, mesh)
+
+    if sspec.kind == "train":
+        opt_cfg = AdamWConfig(state_bits=opt_bits)
+        o_shapes = jax.eval_shape(lambda: init_state(opt_cfg, p_shapes))
+        ospecs = opt_state_specs(o_shapes, pspecs, mesh, zero=True)
+        step = make_train_step(model, opt_cfg, ctx,
+                               microbatches=microbatches)
+        fn = jax.jit(step,
+                     in_shardings=(to_named(pspecs, mesh),
+                                   to_named(ospecs, mesh),
+                                   to_named(bspecs, mesh)),
+                     out_shardings=(to_named(pspecs, mesh),
+                                    to_named(ospecs, mesh),
+                                    NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        args = (p_shapes, o_shapes, in_sds)
+    elif sspec.kind == "prefill":
+        step = make_prefill_step(model, ctx)
+        fn = jax.jit(step,
+                     in_shardings=(to_named(pspecs, mesh),
+                                   to_named(bspecs, mesh)),
+                     out_shardings=NamedSharding(mesh, P()))
+        args = (p_shapes, in_sds)
+    else:  # decode
+        c_shapes = jax.eval_shape(
+            lambda: model.init_cache(sspec.global_batch, sspec.seq_len,
+                                     jnp.bfloat16))
+        cspecs = cache_specs_tree(c_shapes, mesh)
+        step = make_decode_step(model, ctx)
+        fn = jax.jit(step,
+                     in_shardings=(to_named(pspecs, mesh),
+                                   to_named(cspecs, mesh),
+                                   to_named(bspecs, mesh)),
+                     out_shardings=(NamedSharding(mesh, P()),
+                                    to_named(cspecs, mesh)),
+                     donate_argnums=(1,))
+        args = (p_shapes, c_shapes, in_sds)
+    return cfg, fn, args
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             opt_bits: int = 0, save: bool = True,
+             extra_cfg: dict | None = None, tag: str = "",
+             microbatches: int = 1) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg0 = get_config(arch)
+    ok, why = applicable(cfg0, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "opt_bits": opt_bits, "tag": tag}
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        _save(rec, save)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cfg, fn, args = build_cell(arch, shape, mesh, opt_bits=opt_bits,
+                                   extra_cfg=extra_cfg,
+                                   microbatches=microbatches)
+        t1 = time.time()
+        lowered = fn.lower(*args)
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        hc = analyze_hlo(hlo)   # trip-count-corrected (see hlo_cost.py)
+        rec.update({
+            "hlo_cost": hc,
+            "status": "ok",
+            "n_devices": mesh.size,
+            "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+            "build_s": round(t1 - t0, 2),
+            "lower_s": round(t2 - t1, 2),
+            "compile_s": round(t3 - t2, 2),
+            "memory": _mem_summary(compiled),
+            "cost": _cost_summary(compiled),
+            "collectives": coll,
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as e:
+        rec.update({"status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()[-4000:]})
+    _save(rec, save)
+    return rec
+
+
+def _save(rec: dict, save: bool):
+    if not save:
+        return
+    ART.mkdir(parents=True, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    f = ART / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    f.write_text(json.dumps(rec, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--opt-bits", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.multi_pod or not args.single_pod:
+        pass
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod:
+        meshes.append(True)
+    if not meshes:
+        meshes = [False, True]
+
+    cells = []
+    if args.all:
+        for a in sorted(REGISTRY):
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for a, s in cells:
+            rec = run_cell(a, s, mp, opt_bits=args.opt_bits, tag=args.tag)
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_err += st == "error"
+            mem = rec.get("memory", {}).get("peak_bytes")
+            mem_s = f"{mem/2**30:.2f}GiB/dev" if mem else "-"
+            flops = rec.get("cost", {}).get("flops")
+            fl_s = f"{flops:.3e}" if flops else "-"
+            print(f"[{rec['mesh']}] {a:24s} {s:12s} {st:8s} "
+                  f"mem={mem_s:14s} flops={fl_s} "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"{rec.get('reason', '') or rec.get('error', '')}",
+                  flush=True)
+            if st == "ok":
+                print("  memory_analysis:", json.dumps(rec["memory"]))
+                print("  cost_analysis:", json.dumps(rec["cost"]))
+                print("  collectives:",
+                      json.dumps(rec["collectives"]["bytes"]))
+    print(f"\ndry-run summary: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

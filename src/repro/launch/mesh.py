@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time: everything is a function.
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the 'pod'
+axis carries only data parallelism + ZeRO gathers (cross-pod DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many devices exist (tests / examples)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

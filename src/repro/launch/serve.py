@@ -1,0 +1,77 @@
+"""Batched serving entry point: prefill + decode loop with KV caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --width tiny --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import build_model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--width", choices=["tiny", "full"], default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.width == "tiny":
+        cfg = cfg.smoke_config().replace(remat=False)
+    if cfg.frontend != "none":
+        raise SystemExit("serve.py drives text-only archs; "
+                         "see examples/ for the multimodal path")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+
+    B, Lp, G = args.batch, args.prompt_len, args.gen
+    prompts = (jax.random.randint(jax.random.PRNGKey(1), (B, Lp), 0,
+                                  cfg.vocab)).astype(jnp.int32)
+
+    caches = model.init_cache(B, Lp + G + 1, jnp.float32)
+
+    @jax.jit
+    def prefill(params, caches, toks):
+        logits, caches = model.forward(params, toks, caches=caches,
+                                       pos_offset=0)
+        return logits[:, -1], caches
+
+    @jax.jit
+    def step(params, caches, tok, pos):
+        return model.decode_step(params, tok, caches, pos)
+
+    t0 = time.time()
+    logits, caches = prefill(params, caches, prompts)
+    t_prefill = time.time() - t0
+
+    def pick(lg):
+        return jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+
+    tok = pick(logits)
+    out = [tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        logits, caches = step(params, caches, tok, Lp + i)
+        tok = pick(logits)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={cfg.name} batch={B} prefill({Lp} tok)={t_prefill*1e3:.0f}ms "
+          f"decode {G-1} steps @ {dt/(G-1)*1e3:.1f} ms/step")
+    print("sample token ids:", gen[0, :16].tolist())
+    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

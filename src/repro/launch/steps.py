@@ -1,0 +1,89 @@
+"""Step functions (train / prefill / decode) for launch + dry-run.
+
+These close over the model and optimizer config; the dry-run lowers them with
+ShapeDtypeStruct inputs under the production mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model, ParallelCtx
+from ..optim import AdamWConfig, apply_updates, init_state
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    ctx: ParallelCtx = ParallelCtx(),
+                    microbatches: int = 1):
+    """Training step, optionally with gradient accumulation.
+
+    microbatches > 1 splits the global batch along dim 0 and lax.scans the
+    forward+backward, accumulating grads in bf16 (sharded like params).
+    Activation/transient memory scales down ~microbatches x; the optimizer
+    update runs once on the mean gradient.
+    """
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, ctx))(params)
+            new_params, new_state = apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+            return new_params, new_state, loss
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                            params)
+
+        def body(acc, mb):
+            loss, g = jax.value_and_grad(
+                lambda p: model.loss(p, mb, ctx))(params)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.bfloat16), acc, g)
+            return acc, loss
+
+        acc, losses = jax.lax.scan(body, acc0, mbs)
+        grads = jax.tree.map(lambda a: a / microbatches, acc)
+        new_params, new_state = apply_updates(opt_cfg, params, grads,
+                                              opt_state)
+        return new_params, new_state, losses.mean()
+    return train_step
+
+
+def make_prefill_step(model: Model, ctx: ParallelCtx = ParallelCtx()):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch["tokens"],
+                                  extra_embeds=batch.get("extra_embeds"),
+                                  ctx=ctx)
+        # serving returns the last-position logits (next-token distribution)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(model: Model, ctx: ParallelCtx = ParallelCtx()):
+    cfg = model.cfg
+
+    def decode_step(params, caches, batch):
+        kw = {}
+        if cfg.encdec:
+            kw["enc_out"] = batch["enc_out"]
+        logits, new_caches = model.decode_step(params, batch["tokens1"],
+                                               caches, batch["pos"], **kw)
+        return logits, new_caches
+    return decode_step
+
+
+def init_all(model: Model, opt_cfg: AdamWConfig, key,
+             dtype=jnp.bfloat16):
+    params = model.init(key, dtype)
+    opt_state = init_state(opt_cfg, params)
+    return params, opt_state

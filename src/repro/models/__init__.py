@@ -1,0 +1,52 @@
+"""Model zoo: a uniform functional interface over all architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from . import encdec, hybrid, rwkv, transformer
+from .config import (ArchConfig, MLAConfig, MoEConfig, RWKVConfig, SSMConfig)
+from .transformer import ParallelCtx
+
+
+@dataclass(frozen=True)
+class Model:
+    """Uniform handle: every family exposes the same six functions."""
+    cfg: ArchConfig
+    init: Callable          # (key, dtype) -> params
+    loss: Callable           # (params, batch, ctx) -> scalar
+    forward: Callable        # (params, tokens, **kw) -> (logits, caches)
+    init_cache: Callable     # (batch, max_len, dtype) -> caches
+    decode_step: Callable    # (params, tokens1, caches, pos, ctx) -> (logits, caches)
+
+
+def _family_module(cfg: ArchConfig):
+    if cfg.encdec:
+        return encdec
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return rwkv
+    return transformer
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    mod = _family_module(cfg)
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.bfloat16: mod.init_params(cfg, key, dtype),
+        loss=lambda params, batch, ctx=ParallelCtx(): mod.loss_fn(
+            cfg, params, batch, ctx),
+        forward=lambda params, tokens, **kw: mod.forward(
+            cfg, params, tokens, **kw),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(
+            cfg, batch, max_len, dtype),
+        decode_step=lambda params, t1, caches, pos, **kw: mod.decode_step(
+            cfg, params, t1, caches, pos, **kw),
+    )
+
+
+__all__ = ["ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+           "Model", "ParallelCtx", "build_model"]

@@ -1,0 +1,164 @@
+"""Whisper-backbone encoder-decoder (conv frontend is a stub per assignment).
+
+Inputs: ``frames`` [B, S_audio, d_model] — precomputed frame embeddings (the
+stub for the mel-spectrogram conv stem) — and decoder ``tokens`` [B, S_text].
+Encoder = bidirectional self-attention; decoder = causal self-attention +
+cross-attention to the encoder output.
+
+In the EDT view this is a two-statement polyhedral program whose cross-
+attention dependences form a genuinely non-tree task graph (the paper's
+diamond case): every decoder tile depends on every encoder tile.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (attention_core, gqa_apply, gqa_params, mlp_apply,
+                     mlp_params, rmsnorm)
+from .transformer import ParallelCtx, _stack
+
+
+def _xattn_params(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {"wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(dtype),
+            "wk": (jax.random.normal(k2, (d, H * hd)) * s).astype(dtype),
+            "wv": (jax.random.normal(k3, (d, H * hd)) * s).astype(dtype),
+            "wo": (jax.random.normal(k4, (H * hd, d)) * s).astype(dtype)}
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    ke, kenc, kdec, ko, kp = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(cfg.d_model)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "attn": gqa_params(k1, cfg, dtype),
+                "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln_x": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "attn": gqa_params(k1, cfg, dtype),
+                "xattn": _xattn_params(k2, cfg, dtype),
+                "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)}
+
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * s
+                  ).astype(dtype),
+        "enc_pos": (jax.random.normal(kp, (8192, cfg.d_model)) * 0.01
+                    ).astype(dtype),
+        "ln_enc": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "enc_layers": _stack(kenc, cfg.n_encoder_layers, enc_layer),
+        "dec_layers": _stack(kdec, cfg.n_layers, dec_layer),
+        "unembed": (jax.random.normal(ko, (cfg.d_model, cfg.vocab)) * s
+                    ).astype(dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames):
+    B, S, _ = frames.shape
+    pe = params["enc_pos"]
+    if S > pe.shape[0]:
+        reps = -(-S // pe.shape[0])
+        pe = jnp.tile(pe, (reps, 1))
+    x = frames + pe[None, :S]
+    positions = jnp.arange(S)
+
+    def body(h, p):
+        a, _ = gqa_apply(p["attn"], rmsnorm(p["ln1"], h, cfg.rms_eps), cfg,
+                         positions=positions, causal=False)
+        h = h + a
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.rms_eps), cfg.mlp)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["ln_enc"], x, cfg.rms_eps)
+
+
+def _cross_attend(p, x, enc_kv, cfg):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd()
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv
+    Sk = k.shape[1]
+    out = attention_core(q, k, v, causal=False,
+                         q_pos=jnp.arange(S), kv_pos=jnp.arange(Sk))
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def decode(cfg: ArchConfig, params, tokens, enc_out, *, caches=None,
+           pos_offset=0):
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S) + pos_offset
+    H, hd = cfg.n_heads, cfg.hd()
+
+    # Precompute per-layer cross K/V from encoder output (cacheable).
+    def xkv(p):
+        k = (enc_out @ p["xattn"]["wk"]).reshape(B, -1, H, hd)
+        v = (enc_out @ p["xattn"]["wv"]).reshape(B, -1, H, hd)
+        return k, v
+
+    def body(h, inp):
+        p, cache = inp
+        a, nc = gqa_apply(p["attn"], rmsnorm(p["ln1"], h, cfg.rms_eps), cfg,
+                          positions=positions, cache=cache)
+        h = h + a
+        k, v = xkv(p)
+        h = h + _cross_attend(p["xattn"], rmsnorm(p["ln_x"], h, cfg.rms_eps),
+                              (k, v), cfg)
+        h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.rms_eps), cfg.mlp)
+        return h, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = rmsnorm(params["ln_f"], x, cfg.rms_eps)
+    return x @ params["unembed"], new_caches
+
+
+def forward(cfg: ArchConfig, params, tokens, *, extra_embeds=None,
+            caches=None, pos_offset=0, ctx: ParallelCtx = ParallelCtx(),
+            window=None):
+    assert extra_embeds is not None, "enc-dec needs frame embeddings"
+    enc = encode(cfg, params, extra_embeds)
+    return decode(cfg, params, tokens, enc, caches=caches,
+                  pos_offset=pos_offset)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ParallelCtx = ParallelCtx()):
+    from .transformer import xent
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        extra_embeds=batch["extra_embeds"])
+    return xent(logits, batch["labels"], ctx)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.hd()
+    one = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+           "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+           "len": jnp.zeros((), jnp.int32)}
+    return jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), one)
+
+
+def decode_step(cfg, params, tokens1, caches, pos, *, enc_out,
+                ctx: ParallelCtx = ParallelCtx()):
+    logits, nc = decode(cfg, params, tokens1, enc_out, caches=caches,
+                        pos_offset=pos)
+    return logits[:, -1], nc

@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The shared transformer block (attention + MLP with its own weights) is applied
+every ``cfg.shared_attn_every`` layers, with the same weights each time
+(Zamba2's parameter-sharing trick).  SSM layers carry constant-size state, so
+``long_500k`` decoding is O(1) memory per token; the shared attention block
+uses a sliding window at long context (deviation recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import gqa_apply, gqa_params, mlp_apply, mlp_params, rmsnorm
+from .ssm import mamba2_apply, mamba2_params
+from .transformer import ParallelCtx, _stack, seq_shard
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    ke, km, ka, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(cfg.d_model)
+    n_ssm = sum(1 for i in range(cfg.n_layers)
+                if not _is_attn_layer(cfg, i))
+
+    def ssm_layer(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": mamba2_params(k, cfg, dtype)}
+
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * s
+                  ).astype(dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "ssm_layers": _stack(km, n_ssm, ssm_layer),
+        "shared_attn": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": gqa_params(ka, cfg, dtype),
+            "mlp": mlp_params(ko, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(ko, (cfg.d_model, cfg.vocab))
+                             * s).astype(dtype)
+    return params
+
+
+def _is_attn_layer(cfg: ArchConfig, i: int) -> bool:
+    k = cfg.shared_attn_every
+    return k > 0 and (i + 1) % k == 0
+
+
+def _n_ssm(cfg):
+    return sum(1 for i in range(cfg.n_layers) if not _is_attn_layer(cfg, i))
+
+
+def _n_attn(cfg):
+    return cfg.n_layers - _n_ssm(cfg)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, caches=None, pos_offset=0,
+            ctx: ParallelCtx = ParallelCtx(), window: Optional[int] = None,
+            extra_embeds=None):
+    del extra_embeds  # hybrid arch has no modality frontend
+    window = cfg.sliding_window if window is None else window
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+    positions = jnp.arange(S) + pos_offset
+
+    # Group SSM layers between attention applications into scans.
+    k = cfg.shared_attn_every or (cfg.n_layers + 1)
+    new_ssm_caches = []
+    new_attn_caches = []
+    ssm_idx = 0
+    groups = []
+    g = []
+    for i in range(cfg.n_layers):
+        if _is_attn_layer(cfg, i):
+            groups.append(("ssm", g))
+            groups.append(("attn", None))
+            g = []
+        else:
+            g.append(i)
+    if g:
+        groups.append(("ssm", g))
+
+    attn_i = 0
+    for kind, idxs in groups:
+        if kind == "ssm":
+            if not idxs:
+                continue
+            n = len(idxs)
+            sl = jax.tree.map(lambda a: a[ssm_idx:ssm_idx + n],
+                              params["ssm_layers"])
+            c = None if caches is None else jax.tree.map(
+                lambda a: a[ssm_idx:ssm_idx + n], caches["ssm"])
+
+            def body(h, inp):
+                p, cc = inp
+                y, nc = mamba2_apply(p["mamba"],
+                                     rmsnorm(p["ln"], h, cfg.rms_eps), cfg,
+                                     cache=cc)
+                return seq_shard(h + y, ctx), nc
+
+            if cfg.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, ncs = jax.lax.scan(body, x, (sl, c))
+            if caches is not None:
+                new_ssm_caches.append(ncs)
+            ssm_idx += n
+        else:
+            p = params["shared_attn"]
+            c = None if caches is None else jax.tree.map(
+                lambda a: a[attn_i], caches["attn"])
+            h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+            a, nc = gqa_apply(p["attn"], h, cfg, positions=positions,
+                              cache=c, window=window, ctx=ctx)
+            x = x + a
+            h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+            x = seq_shard(x + mlp_apply(p["mlp"], h, cfg.mlp), ctx)
+            if caches is not None:
+                new_attn_caches.append(nc)
+            attn_i += 1
+
+    x = rmsnorm(params["ln_f"], x, cfg.rms_eps)
+    logits = x @ (params["embed"].T if cfg.tie_embeddings
+                  else params["unembed"])
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                *new_ssm_caches),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *new_attn_caches),
+        }
+    return logits, new_caches
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ParallelCtx = ParallelCtx()):
+    from .transformer import xent
+    logits, _ = forward(cfg, params, batch["tokens"], ctx=ctx)
+    return xent(logits, batch["labels"], ctx)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_c = di + 2 * s.d_state
+    ssm_one = {"conv": jnp.zeros((batch, s.d_conv - 1, conv_c), dtype),
+               "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state),
+                                jnp.float32)}
+    hd = cfg.hd()
+    if cfg.sliding_window and cfg.sliding_window < max_len:
+        W = cfg.sliding_window
+        attn_one = {"k": jnp.zeros((batch, W, cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((batch, W, cfg.n_kv_heads, hd), dtype),
+                    "pos": jnp.full((W,), -1, jnp.int32),
+                    "len": jnp.zeros((), jnp.int32)}
+    else:
+        attn_one = {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+                    "len": jnp.zeros((), jnp.int32)}
+    return {
+        "ssm": jax.tree.map(lambda x: jnp.stack([x] * _n_ssm(cfg)), ssm_one),
+        "attn": jax.tree.map(lambda x: jnp.stack([x] * _n_attn(cfg)), attn_one),
+    }
+
+
+def decode_step(cfg, params, tokens1, caches, pos,
+                ctx: ParallelCtx = ParallelCtx()):
+    logits, new_caches = forward(cfg, params, tokens1, caches=caches,
+                                 pos_offset=pos, ctx=ctx)
+    return logits[:, -1], new_caches

@@ -1,0 +1,531 @@
+"""Core layers: RMSNorm, RoPE, chunked (flash-style) attention, GQA, MLA,
+SwiGLU/GELU MLPs, and MoE (einsum dispatch + expert-parallel all-to-all).
+
+All layers are pure functions over pytree params.  Attention uses an
+online-softmax chunked algorithm in plain lax (same algorithm as the Pallas
+kernel in ``repro.kernels.flash_attention``), so the 32k-sequence shapes never
+materialize an S×S score matrix even on the XLA path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ArchConfig
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- basics
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (w * x).astype(dt)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding. x: [..., S, H, D], pos: [S] or [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs        # [.., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [.., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------- chunked flash attention
+def _attn_chunked(q, k, v, *, causal: bool, q_pos, kv_pos,
+                  window: int = 0, chunk: int = 1024, q_block: int = 512,
+                  scale: float = None):
+    """Online-softmax attention, blocked on BOTH q and kv (flash algorithm).
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D]; GQA by head grouping.
+    Peak live memory is O(q_block * chunk) per (batch, head) — both loops are
+    rematerialized in the backward pass (flash backward), so no O(Sq*Skv)
+    tensor is ever saved.
+    """
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+
+    q_block = min(q_block, Sq)
+    qpad = (-Sq) % q_block
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, qpad), constant_values=2_000_000_000)
+    nqb = (Sq + qpad) // q_block
+    qg = q.reshape(B, nqb, q_block, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nqb, q_block)
+
+    nchunk = (Skv + chunk - 1) // chunk
+    pad = nchunk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1_000_000_000)
+    kc = k.reshape(B, nchunk, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(nchunk, chunk)
+
+    def make_q_body(kc_g, vc_g, pc_g):
+        def q_body(qb_and_pos):
+            qb, pb_q = qb_and_pos
+
+            def body(carry, inp):
+                m, l, acc = carry
+                kb, vb, pb = inp
+                s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
+                mask = jnp.ones((q_block, chunk), dtype=bool)
+                if causal:
+                    mask &= pb_q[:, None] >= pb[None, :]
+                if window:
+                    mask &= pb_q[:, None] - pb[None, :] < window
+                mask &= pb[None, :] > -1_000_000_000 + 1  # kv padding
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                    preferred_element_type=jnp.float32)
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((B, Hkv, G, q_block), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+            a0 = jnp.zeros((B, Hkv, G, q_block, Dv), jnp.float32)
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                          (kc_g, vc_g, pc_g))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.astype(q.dtype)        # [B,Hkv,G,q_block,Dv]
+        return jax.checkpoint(
+            q_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    # §Perf: static causal split — group the q blocks and give each group
+    # only the kv chunks at or below its causal horizon.  With 4 groups the
+    # fully-masked upper-triangle block work drops ~37.5% while every loop
+    # keeps a STATIC trip count (dynamic bounds would break both Mosaic
+    # pipelining on TPU and the HLO cost accounting).
+    n_groups = 4 if (causal and not window and nqb >= 8) else 1
+    per = nqb // n_groups
+    outs_groups = []
+    for gi in range(n_groups):
+        lo = gi * per
+        hi = nqb if gi == n_groups - 1 else (gi + 1) * per
+        n_ch = nchunk if gi == n_groups - 1 else \
+            min(nchunk, -(-(hi * q_block) // chunk))
+        q_body = make_q_body(kc[:n_ch], vc[:n_ch], pc[:n_ch])
+        outs_groups.append(jax.lax.map(q_body, (qg[lo:hi], qp[lo:hi])))
+    outs = jnp.concatenate(outs_groups, axis=0) if n_groups > 1 \
+        else outs_groups[0]                    # [nqb,B,Hkv,G,q_block,Dv]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(
+        B, Sq + qpad, Hkv * G, Dv)
+    if qpad:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def _attn_direct(q, k, v, *, causal, q_pos, kv_pos, window=0, scale=None):
+    """Direct attention (decode / small sequences)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    mask &= kv_pos[None, :] >= 0
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    Dv = v.shape[-1]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal=True, q_pos=None, kv_pos=None,
+                   window=0, scale=None, impl="xla"):
+    Sq, Skv = q.shape[1], k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if kv_pos is None:
+        kv_pos = jnp.arange(Skv)
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        if Sq == Skv and causal and window == 0 and Sq % 128 == 0:
+            return kops.flash_attention(q, k, v, causal=True)
+        # fall through for shapes the kernel doesn't cover
+    if Sq == 1 or Sq * Skv <= 1024 * 1024:
+        return _attn_direct(q, k, v, causal=causal, q_pos=q_pos,
+                            kv_pos=kv_pos, window=window, scale=scale)
+    return _attn_chunked(q, k, v, causal=causal, q_pos=q_pos, kv_pos=kv_pos,
+                         window=window, scale=scale)
+
+
+# ---------------------------------------------------------------------- GQA
+def gqa_params(key, cfg: ArchConfig, dtype):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, Hkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, Hkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H * hd, d)) * s).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def gqa_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+              causal=True, window=0, ctx=None):
+    """GQA attention.  cache: dict(k,v [B,Smax,Hkv,hd], len) for decode."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if ctx is not None and getattr(ctx, "mesh", None) is not None and S > 1:
+        # §Perf: materialize K/V with a FIXED batch-only sharding before the
+        # flash q-block/kv-chunk loops.  Without this, the sequence-sharded
+        # K/V is re-all-gathered inside every loop iteration (nqb x nchunk x
+        # L x remat times); with it, SPMD gathers once per layer.
+        from .transformer import wsc
+        hkv_ax = "model" if Hkv % ctx.mesh.shape["model"] == 0 else None
+        q = wsc(q, ctx, ctx.dp_spec, None, "model"
+                if H % ctx.mesh.shape["model"] == 0 else None, None)
+        k = wsc(k, ctx, ctx.dp_spec, None, hkv_ax, None)
+        v = wsc(v, ctx, ctx.dp_spec, None, hkv_ax, None)
+    new_cache = None
+    if cache is not None:
+        if "pos" in cache:
+            # ring buffer (sliding-window long-context decode): S must be 1
+            W = cache["k"].shape[1]
+            idx = cache["len"] % W
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            cp = jax.lax.dynamic_update_slice(
+                cache["pos"], positions.astype(jnp.int32), (idx,))
+            new_cache = {"k": ck, "v": cv, "pos": cp, "len": cache["len"] + S}
+            out = attention_core(q, ck, cv, causal=causal, q_pos=positions,
+                                 kv_pos=cp, window=window, impl=cfg.attn_impl)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                              (0, cache["len"], 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                              (0, cache["len"], 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": cache["len"] + S}
+            kv_pos = jnp.arange(ck.shape[1])
+            kv_pos = jnp.where(kv_pos < cache["len"] + S, kv_pos, -1)
+            out = attention_core(q, ck, cv, causal=causal, q_pos=positions,
+                                 kv_pos=kv_pos, window=window,
+                                 impl=cfg.attn_impl)
+    else:
+        out = attention_core(q, k, v, causal=causal, q_pos=positions,
+                             kv_pos=positions, window=window,
+                             impl=cfg.attn_impl)
+    return out.reshape(B, S, H * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------- MLA
+def mla_params(key, cfg: ArchConfig, dtype):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": (jax.random.normal(ks[0], (d, m.q_lora_rank)) * s).astype(dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wuq": (jax.random.normal(ks[1], (m.q_lora_rank, H * qk_dim))
+                / math.sqrt(m.q_lora_rank)).astype(dtype),
+        "wdkv": (jax.random.normal(ks[2], (d, m.kv_lora_rank)) * s).astype(dtype),
+        "wkr": (jax.random.normal(ks[3], (d, m.qk_rope_head_dim)) * s).astype(dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wuk": (jax.random.normal(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim))
+                / math.sqrt(m.kv_lora_rank)).astype(dtype),
+        "wuv": (jax.random.normal(ks[5], (m.kv_lora_rank, H * m.v_head_dim))
+                / math.sqrt(m.kv_lora_rank)).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (H * m.v_head_dim, d)) * s).astype(dtype),
+    }
+
+
+def mla_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+              absorbed_decode: bool = True, ctx=None):
+    """DeepSeek MLA.  The decode cache stores only (c_kv, k_rope) —
+    (kv_lora_rank + rope_dim) per token instead of 2·H·hd.
+
+    absorbed_decode: use the W_uk-absorption identity so decode attends
+    directly against the compressed cache (never materializes K for the
+    whole context) — a §Perf optimization, default-on.
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B, S, d = x.shape
+    nope, rdim, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    cq = rmsnorm(p["q_norm"], x @ p["wdq"], cfg.rms_eps)
+    q = (cq @ p["wuq"]).reshape(B, S, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["wdkv"]                                # [B,S,r]
+    k_rope = rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)
+    c_kv_n = rmsnorm(p["kv_norm"], c_kv, cfg.rms_eps)
+
+    scale = 1.0 / math.sqrt(nope + rdim)
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_n,
+                                          (0, cache["len"], 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, :, 0, :],
+                                          (0, cache["len"], 0))
+        new_cache = {"c_kv": cc, "k_rope": cr, "len": cache["len"] + S}
+        Sk = cc.shape[1]
+        kv_pos = jnp.arange(Sk)
+        kv_pos_m = jnp.where(kv_pos < cache["len"] + S, kv_pos, -1)
+        if absorbed_decode:
+            # q_c[h] = W_uk[h]^T q_nope[h]  -> score = q_c . c_kv + q_r . k_r
+            wuk = p["wuk"].reshape(m.kv_lora_rank, H, nope)
+            q_c = jnp.einsum("bshn,rhn->bshr", q_nope, wuk)
+            s1 = jnp.einsum("bshr,bkr->bhsk", q_c, cc,
+                            preferred_element_type=jnp.float32)
+            s2 = jnp.einsum("bshr,bkr->bhsk", q_rope, cr,
+                            preferred_element_type=jnp.float32)
+            sc = (s1 + s2) * scale
+            mask = (positions[:, None] >= kv_pos_m[None, :]) & (kv_pos_m >= 0)[None, :]
+            sc = jnp.where(mask[None, None], sc, NEG_INF)
+            pr = jax.nn.softmax(sc, axis=-1)
+            # out[h] = (pr . c_kv) W_uv[h]
+            ctx = jnp.einsum("bhsk,bkr->bshr", pr.astype(cc.dtype), cc)
+            wuv = p["wuv"].reshape(m.kv_lora_rank, H, vdim)
+            out = jnp.einsum("bshr,rhv->bshv", ctx, wuv)
+        else:
+            k_nope = (cc @ p["wuk"]).reshape(B, Sk, H, nope)
+            vfull = (cc @ p["wuv"]).reshape(B, Sk, H, vdim)
+            kfull = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(cr[:, :, None, :], (B, Sk, H, rdim))],
+                axis=-1)
+            qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = attention_core(qfull, kfull, vfull, causal=True,
+                                 q_pos=positions, kv_pos=kv_pos_m, scale=scale)
+        return out.reshape(B, S, H * vdim) @ p["wo"], new_cache
+
+    k_nope = (c_kv_n @ p["wuk"]).reshape(B, S, H, nope)
+    vfull = (c_kv_n @ p["wuv"]).reshape(B, S, H, vdim)
+    kfull = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rdim))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if ctx is not None and getattr(ctx, "mesh", None) is not None and S > 1:
+        # §Perf: fix Q/K/V sharding (heads over 'model') before the flash
+        # loops — otherwise the seq-sharded K/V is re-gathered per q-block.
+        from .transformer import wsc
+        hax = "model" if H % ctx.mesh.shape["model"] == 0 else None
+        qfull = wsc(qfull, ctx, ctx.dp_spec, None, hax, None)
+        kfull = wsc(kfull, ctx, ctx.dp_spec, None, hax, None)
+        vfull = wsc(vfull, ctx, ctx.dp_spec, None, hax, None)
+    out = attention_core(qfull, kfull, vfull, causal=True, q_pos=positions,
+                         kv_pos=positions, scale=scale, impl=cfg.attn_impl)
+    return out.reshape(B, S, H * vdim) @ p["wo"], None
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_params(key, d: int, ff: int, kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    if kind == "swiglu":
+        return {"wg": (jax.random.normal(k1, (d, ff)) * s).astype(dtype),
+                "wu": (jax.random.normal(k2, (d, ff)) * s).astype(dtype),
+                "wd": (jax.random.normal(k3, (ff, d)) / math.sqrt(ff)).astype(dtype)}
+    return {"w1": (jax.random.normal(k1, (d, ff)) * s).astype(dtype),
+            "w2": (jax.random.normal(k2, (ff, d)) / math.sqrt(ff)).astype(dtype)}
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_params(key, cfg: ArchConfig, dtype):
+    mo, d = cfg.moe, cfg.d_model
+    ff = mo.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, mo.n_experts)) * s).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (mo.n_experts, d, ff)) * s).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (mo.n_experts, d, ff)) * s).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (mo.n_experts, ff, d)) / math.sqrt(ff)).astype(dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = mlp_params(ks[4], d, ff * mo.n_shared, "swiglu", dtype)
+    return p
+
+
+def moe_einsum_apply(p, x, cfg: ArchConfig):
+    """Switch-style capacity dispatch with *grouped* one-hot einsums.
+
+    The dispatch tensor is [G, Tg, E, C] with C per-group: total memory is
+    T·E·C/G = T·Tg·k·cf — bounded by the group size, not the global batch,
+    so the formulation stays viable at 1M tokens.  Groups align with the
+    batch sharding, so dispatch einsums never cross shards.
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    Tg = min(getattr(mo, "group_size", 512), T)
+    G = T // Tg
+    if G * Tg != T:  # fall back to a single group for ragged tiny inputs
+        G, Tg = 1, T
+    xt = x.reshape(G, Tg, d)
+    logits = xt.astype(jnp.float32) @ p["router"]           # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, mo.top_k)              # [G,Tg,k]
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9))
+    C = max(1, int(Tg * mo.top_k / mo.n_experts * mo.capacity_factor))
+    onehot = jax.nn.one_hot(idx, mo.n_experts, dtype=jnp.int32)  # [G,Tg,k,E]
+    pos_all = (jnp.cumsum(onehot.reshape(G, Tg * mo.top_k, mo.n_experts),
+                          axis=1).reshape(G, Tg, mo.top_k, mo.n_experts) - 1)
+    pos = (pos_all * onehot).sum(-1)                        # [G,Tg,k]
+    keep = pos < C
+    slot_oh = (jax.nn.one_hot(pos, C, dtype=x.dtype)
+               * keep[..., None].astype(x.dtype))           # [G,Tg,k,C]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gtke,gtk,gtkc->gtec", onehot.astype(jnp.float32),
+                      gate.astype(jnp.float32), slot_oh.astype(jnp.float32))
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp)             # [G,E,C,d]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    yt = jnp.einsum("gecd,gtec->gtd", ye, comb.astype(x.dtype))
+    out = yt.reshape(B, S, d)
+    if mo.n_shared:
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out
+
+
+MOE_PARAM_SPECS = {
+    "router": P(None, None),
+    "wg": P("model", None, None),
+    "wu": P("model", None, None),
+    "wd": P("model", None, None),
+    "shared": {"wg": P(None, "model"), "wu": P(None, "model"),
+               "wd": P("model", None)},
+}
+
+
+def moe_ep_apply(p, x, cfg: ArchConfig, *, ep_axis: Optional[str] = None,
+                 ep_size: int = 1):
+    """Expert-parallel MoE with explicit all-to-all (DeepSeek-style EP).
+
+    Called inside shard_map: ``x`` is the per-device token block
+    [B_loc, S_loc, d]; expert weights arrive sliced [E_loc, ...] where
+    E_loc = E / ep_size.  Dispatch: local top-k -> sort by destination
+    shard -> fixed-capacity send buffer -> all_to_all -> local expert
+    GEMMs -> all_to_all back -> weighted combine.
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = mo.n_experts
+    e_loc = E // ep_size
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, mo.top_k)              # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    TK = T * mo.top_k
+    flat_e = idx.reshape(TK)                                # expert id per slot
+    flat_dst = flat_e // e_loc                              # destination shard
+    flat_tok = jnp.repeat(jnp.arange(T), mo.top_k)
+    flat_gate = gate.reshape(TK)
+
+    # capacity per destination shard
+    C = max(1, int(TK / ep_size * mo.capacity_factor))
+    order = jnp.argsort(flat_dst)                           # local sort (cheap)
+    e_sorted = flat_e[order]
+    d_sorted = flat_dst[order]
+    t_sorted = flat_tok[order]
+    g_sorted = flat_gate[order]
+    # position within destination bucket
+    pos_in_dst = jnp.arange(TK) - jnp.searchsorted(d_sorted, d_sorted, side="left")
+    keep = pos_in_dst < C
+    slot = jnp.where(keep, d_sorted * C + pos_in_dst, ep_size * C)  # overflow->drop
+
+    send_x = jnp.zeros((ep_size * C + 1, d), x.dtype).at[slot].set(xt[t_sorted])
+    send_e = jnp.full((ep_size * C + 1,), -1, jnp.int32).at[slot].set(
+        (e_sorted % e_loc).astype(jnp.int32))
+    send_x, send_e = send_x[:-1], send_e[:-1]
+
+    if ep_axis is not None:
+        recv_x = jax.lax.all_to_all(send_x.reshape(ep_size, C, d), ep_axis,
+                                    0, 0, tiled=False).reshape(ep_size * C, d)
+        recv_e = jax.lax.all_to_all(send_e.reshape(ep_size, C), ep_axis,
+                                    0, 0, tiled=False).reshape(ep_size * C)
+    else:
+        recv_x, recv_e = send_x, send_e
+
+    # local expert processing: sort received slots by local expert id
+    N = recv_x.shape[0]
+    Ce = max(1, int(N / e_loc * mo.capacity_factor))
+    ekey_raw = jnp.where(recv_e < 0, e_loc, recv_e)   # empty slots sort last
+    order2 = jnp.argsort(ekey_raw)
+    ekey = ekey_raw[order2]                            # sorted
+    pos2 = jnp.arange(N) - jnp.searchsorted(ekey, ekey, side="left")
+    keep2 = (pos2 < Ce) & (ekey < e_loc)
+    slot2 = jnp.where(keep2, ekey * Ce + pos2, e_loc * Ce)
+    buf = jnp.zeros((e_loc * Ce + 1, d), x.dtype).at[slot2].set(recv_x[order2])
+    buf = buf[:-1].reshape(e_loc, Ce, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    yb = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(e_loc * Ce, d)
+
+    # un-sort back to recv slot order, then all_to_all back
+    y_recv = jnp.zeros((N, d), x.dtype)
+    take = jnp.where(keep2, slot2, 0)
+    vals = jnp.where(keep2[:, None], yb[take], 0)
+    y_recv = y_recv.at[order2].set(vals)
+
+    if ep_axis is not None:
+        y_send = jax.lax.all_to_all(y_recv.reshape(ep_size, C, d), ep_axis,
+                                    0, 0, tiled=False).reshape(ep_size * C, d)
+    else:
+        y_send = y_recv
+
+    # combine at origin: slot -> (token, gate)
+    contrib = jnp.where(keep[:, None], y_send[jnp.where(keep, slot, 0)], 0)
+    yt = jnp.zeros((T, d), jnp.float32).at[t_sorted].add(
+        contrib.astype(jnp.float32) * g_sorted[:, None])
+    out = yt.astype(x.dtype).reshape(B, S, d)
+    if mo.n_shared:
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out

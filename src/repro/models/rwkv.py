@@ -1,0 +1,95 @@
+"""RWKV6 ("Finch") language model: attention-free, O(S) compute, O(1) state."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .ssm import (rwkv6_channel_mix, rwkv6_params, rwkv6_time_mix)
+from .transformer import ParallelCtx, _stack, seq_shard
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    ke, kl, ko = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(cfg.d_model)
+
+    def layer(k):
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "mix": rwkv6_params(k, cfg, dtype)}
+
+    p = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * s
+                  ).astype(dtype),
+        "ln_in": jnp.ones((cfg.d_model,), dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "layers": _stack(kl, cfg.n_layers, layer),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(ko, (cfg.d_model, cfg.vocab)) * s
+                        ).astype(dtype)
+    return p
+
+
+def _ln(w, x, eps):
+    xf = x.astype(jnp.float32)
+    return (w * (xf * jax.lax.rsqrt(
+        jnp.mean(xf * xf, -1, keepdims=True) + eps))).astype(x.dtype)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, caches=None, pos_offset=0,
+            ctx: ParallelCtx = ParallelCtx(), window=None, extra_embeds=None):
+    del extra_embeds  # attention-free LM has no modality frontend
+    x = params["embed"][tokens]
+    x = _ln(params["ln_in"], x, cfg.rms_eps)
+
+    def body(h, inp):
+        p, cache = inp
+        tm_cache = None if cache is None else cache["tm"]
+        cm_cache = None if cache is None else cache["cm"]
+        a, tm_new = rwkv6_time_mix(p["mix"], _ln(p["ln1"], h, cfg.rms_eps),
+                                   cfg, cache=tm_cache,
+                                   use_kernel=(cfg.attn_impl == "pallas"))
+        h = h + a
+        c, cm_new = rwkv6_channel_mix(p["mix"], _ln(p["ln2"], h, cfg.rms_eps),
+                                      cache=cm_cache)
+        h = seq_shard(h + c, ctx)
+        nc = None if cache is None else {"tm": tm_new, "cm": cm_new}
+        return h, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = _ln(params["ln_f"], x, cfg.rms_eps)
+    logits = x @ (params["embed"].T if cfg.tie_embeddings
+                  else params["unembed"])
+    return logits, new_caches
+
+
+def loss_fn(cfg: ArchConfig, params, batch, ctx: ParallelCtx = ParallelCtx()):
+    from .transformer import xent
+    logits, _ = forward(cfg, params, batch["tokens"], ctx=ctx)
+    return xent(logits, batch["labels"], ctx)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    D = cfg.rwkv.head_dim
+    one = {
+        "tm": {"shift": jnp.zeros((batch, 1, d), dtype),
+               "wkv": jnp.zeros((batch, H, D, D), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }
+    return jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), one)
+
+
+def decode_step(cfg, params, tokens1, caches, pos,
+                ctx: ParallelCtx = ParallelCtx()):
+    logits, new_caches = forward(cfg, params, tokens1, caches=caches,
+                                 pos_offset=pos, ctx=ctx)
+    return logits[:, -1], new_caches

@@ -1,0 +1,293 @@
+"""State-space blocks: Mamba2 (SSD, chunked) and RWKV6 (data-dependent decay).
+
+Both are written as chunked scans (`lax.scan` over sequence chunks with a
+constant-size carried state), which is what makes the ``long_500k`` shapes
+lowerable: compute is O(S), state is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+# =====================================================================
+# Mamba2 (SSD — state space duality, chunked algorithm)
+# =====================================================================
+def mamba2_params(key, cfg: ArchConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        # fused in_proj -> [z, x, B, C, dt]
+        "win": (jax.random.normal(ks[0], (d, 2 * di + 2 * s.d_state + nh)) * sc
+                ).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (s.d_conv, di + 2 * s.d_state))
+                 * 0.1).astype(dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "wout": (jax.random.normal(ks[2], (di, d)) / math.sqrt(di)).astype(dtype),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD: xh [B,S,H,P], dt [B,S,H] (>=0), A [H] (<0 decay rate),
+    Bm/Cm [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    Within a chunk the quadratic (attention-like) form is used; across chunks
+    a recurrent state [H, P, N] is carried — O(S) total work.
+    """
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(B, nc, chunk, H, Pd)
+    dtc = dt.reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]              # [B,nc,L,H] (negative)
+    cums = jnp.cumsum(dA, axis=2)                  # within-chunk cumulative
+
+    def body(state, inp):
+        xb, dtb, Bb, Cb, dAb, cumb = inp           # [B,L,...]
+        # decay from chunk start to position t: exp(cum[t])
+        seg = jnp.exp(cumb)                        # [B,L,H]
+        # inter-chunk: contribution of incoming state
+        y_state = jnp.einsum("bln,bhpn->blhp", Cb, state) * seg[..., None]
+        # intra-chunk quadratic form: L x L decay matrix per head
+        rel = cumb[:, :, None, :] - cumb[:, None, :, :]      # [B,L,L,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bln,bmn->blm", Cb, Bb)[..., None] * decay
+        y_intra = jnp.einsum("blmh,bmh,bmhp->blhp", scores, dtb, xb)
+        # state update: carry to end of chunk
+        chunk_decay = jnp.exp(cums_last := cumb[:, -1:, :])  # [B,1,H]
+        w = jnp.exp(cumb[:, -1:, :] - cumb)                  # decay t..end
+        state_new = state * chunk_decay[:, 0, :, None, None] + \
+            jnp.einsum("blh,blhp,bln->bhpn", dtb * w, xb, Bb)
+        return state_new, y_state + y_intra
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Pd, N), jnp.float32)
+    inps = (xc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+            dtc.transpose(1, 0, 2, 3).astype(jnp.float32),
+            Bc.transpose(1, 0, 2, 3).astype(jnp.float32),
+            Cc.transpose(1, 0, 2, 3).astype(jnp.float32),
+            dA.transpose(1, 0, 2, 3),
+            cums.transpose(1, 0, 2, 3))
+    # recompute the [L,L,H] intra-chunk decay/score tensors in backward
+    # instead of saving them per chunk (they dominate memory otherwise)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(body, init_state, inps)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Pd)
+    return y, state
+
+
+def mamba2_apply(p, x, cfg: ArchConfig, *, cache: Optional[dict] = None):
+    """Mamba2 block.  cache = {'conv': [B,d_conv-1,Ci], 'ssm': [B,H,P,N]}
+    enables O(1) decode steps."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.expand * d
+    nh = di // s.head_dim
+    N = s.d_state
+    proj = x @ p["win"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)       # [B,S,di+2N]
+
+    new_cache = None
+    if cache is not None:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)
+        conv_src = hist[:, -(S + s.d_conv - 1):]
+        new_conv = hist[:, -(s.d_conv - 1):]
+    else:
+        conv_src = jnp.pad(conv_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(s.d_conv - 1):]
+
+    # causal depthwise conv1d
+    idx = jnp.arange(S)[:, None] + jnp.arange(s.d_conv)[None, :]
+    win = conv_src[:, idx]                                   # [B,S,K,C]
+    conv_out = jax.nn.silu(jnp.einsum("bskc,kc->bsc", win, p["conv"]))
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                 # [H], negative
+    xh = xin.reshape(B, S, nh, s.head_dim)
+
+    if S == 1:                                               # recurrent decode
+        state = cache["ssm"] if cache is not None else \
+            jnp.zeros((B, nh, s.head_dim, N), jnp.float32)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                  # [B,H]
+        st = state * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32),
+            Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), st)
+        y = y[:, None] .reshape(B, 1, nh, s.head_dim)
+        new_state = st
+    else:
+        chunk = min(s.chunk, S)
+        pad = (-S) % chunk
+        init = cache["ssm"] if cache is not None else None
+        if pad:
+            # dt=0 on padding => decay 1, contribution 0: state is unchanged
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            y, new_state = _ssd_chunk_scan(xh_p, dt_p, A, Bm_p, Cm_p,
+                                           chunk, init)
+            y = y[:, :S]
+        else:
+            y, new_state = _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk, init)
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (Mamba2 style)
+    y = y * jax.nn.silu(z)
+    dtp = y.dtype
+    yf = y.astype(jnp.float32)
+    y = (p["norm"] * (yf * jax.lax.rsqrt(
+        jnp.mean(yf * yf, -1, keepdims=True) + cfg.rms_eps))).astype(dtp)
+    out = y @ p["wout"]
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    return out, new_cache
+
+
+# =====================================================================
+# RWKV6 ("Finch"): token shift + data-dependent decay WKV
+# =====================================================================
+def rwkv6_params(key, cfg: ArchConfig, dtype):
+    r = cfg.rwkv
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    sc = 1.0 / math.sqrt(d)
+    nh = d // r.head_dim
+    return {
+        "mix_rkvwg": jnp.full((5, d), 0.5, dtype),     # token-shift mixes
+        "wr": (jax.random.normal(ks[0], (d, d)) * sc).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, d)) * sc).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, d)) * sc).astype(dtype),
+        "wg": (jax.random.normal(ks[3], (d, d)) * sc).astype(dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),       # decay bias
+        "w_lora_a": (jax.random.normal(ks[4], (d, r.decay_lora)) * sc).astype(dtype),
+        "w_lora_b": (jax.random.normal(ks[5], (r.decay_lora, d)) * 0.1).astype(dtype),
+        "u": (jax.random.normal(ks[6], (nh, r.head_dim)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": (jax.random.normal(ks[7], (d, d)) * sc).astype(dtype),
+        # channel-mix
+        "mix_cm": jnp.full((2, d), 0.5, dtype),
+        "ck": (jax.random.normal(ks[8], (d, cfg.d_ff)) * sc).astype(dtype),
+        "cv": (jax.random.normal(ks[9], (cfg.d_ff, d)) / math.sqrt(cfg.d_ff)).astype(dtype),
+        "cr": (jax.random.normal(ks[10], (d, d)) * sc).astype(dtype),
+    }
+
+
+def _wkv6_scan(r, k, v, w, u, init_state=None, chunk: int = 64):
+    """WKV6 recurrence as a two-level (chunked) scan.
+
+    r,k,v: [B,S,H,D]; w: [B,S,H,D] per-channel decay in (0,1);
+    u: [H,D] bonus. state: [B,H,D,D] (key x value outer products).
+    out[t] = (state + u * k_t ⊗ v_t) . r_t ;  state = w_t*state + k_t ⊗ v_t.
+
+    The outer scan carries the state between chunks and its body is
+    rematerialized in backward (`jax.checkpoint`), so training memory is
+    O(S/chunk) states instead of O(S) — same structure as the Pallas kernel.
+    """
+    B, S, H, D = r.shape
+    state = init_state if init_state is not None else \
+        jnp.zeros((B, H, D, D), jnp.float32)
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # w=1 on padding => state unchanged; outputs discarded
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def to_chunks(x):
+        return (x.reshape(B, nc, chunk, H, D).transpose(1, 2, 0, 3, 4)
+                .astype(jnp.float32))            # [nc, C, B, H, D]
+
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(w))
+
+    def chunk_body(st, inp):
+        rc, kc, vc, wc = inp                      # [C, B, H, D]
+
+        def step(s, t_inp):
+            rt, kt, vt, wt = t_inp
+            kv = kt[..., :, None] * vt[..., None, :]
+            out = jnp.einsum("bhd,bhde->bhe", rt,
+                             s + u[None, :, :, None] * kv)
+            s = wt[..., :, None] * s + kv
+            return s, out
+
+        st, outs = jax.lax.scan(step, st, (rc, kc, vc, wc))
+        return st, outs                           # outs [C, B, H, D]
+
+    chunk_body = jax.checkpoint(
+        chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    state, outs = jax.lax.scan(chunk_body, state, xs)  # [nc, C, B, H, D]
+    outs = outs.reshape(Sp, B, H, D).transpose(1, 0, 2, 3)[:, :S]
+    return outs.astype(r.dtype), state
+
+
+def rwkv6_time_mix(p, x, cfg: ArchConfig, *, cache: Optional[dict] = None,
+                   use_kernel: bool = False):
+    r_cfg = cfg.rwkv
+    B, S, d = x.shape
+    H = d // r_cfg.head_dim
+    D = r_cfg.head_dim
+    last = cache["shift"] if cache is not None else \
+        jnp.zeros((B, 1, d), x.dtype)
+    xs = jnp.concatenate([last, x[:, :-1]], axis=1)          # token shift
+    mixed = [x + (xs - x) * p["mix_rkvwg"][i] for i in range(5)]
+    r = (mixed[0] @ p["wr"]).reshape(B, S, H, D)
+    k = (mixed[1] @ p["wk"]).reshape(B, S, H, D)
+    v = (mixed[2] @ p["wv"]).reshape(B, S, H, D)
+    g = jax.nn.silu(mixed[4] @ p["wg"])
+    wdec = p["w0"] + (jnp.tanh(mixed[3] @ p["w_lora_a"]) @ p["w_lora_b"]
+                      ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wdec)).reshape(B, S, H, D)          # (0,1)
+
+    init = cache["wkv"] if cache is not None else None
+    if use_kernel and S > 1:
+        from ..kernels import ops as kops
+        out, state = kops.wkv6(r, k, v, w, p["u"], init_state=init)
+    else:
+        out, state = _wkv6_scan(r, k, v, w, p["u"], init_state=init)
+    out = out.reshape(B, S, d)
+    dt = x.dtype
+    of = out.astype(jnp.float32)
+    out = (p["ln_x"] * (of * jax.lax.rsqrt(
+        jnp.mean(of * of, -1, keepdims=True) + cfg.rms_eps))).astype(dt)
+    out = (out * g) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1:], "wkv": state}
+    return out, new_cache
+
+
+def rwkv6_channel_mix(p, x, *, cache=None):
+    B, S, d = x.shape
+    last = cache["shift"] if cache is not None else jnp.zeros((B, 1, d), x.dtype)
+    xs = jnp.concatenate([last, x[:, :-1]], axis=1)
+    xk = x + (xs - x) * p["mix_cm"][0]
+    xr = x + (xs - x) * p["mix_cm"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out = jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    return out, ({"shift": x[:, -1:]} if cache is not None else None)

@@ -1,0 +1,245 @@
+"""Sharding rules: pytree-path pattern -> PartitionSpec, per architecture.
+
+Axis conventions (see launch/mesh.py):
+  'data' (+ 'pod' when multi-pod)  — batch / ZeRO axis
+  'model'                          — TP / EP / head axis
+
+Rules are (regex over the flattened path, spec builder).  Param tensors are
+stacked per layer ([L, ...] leading dim), so most specs start with None.
+The same rules shard the AdamW moment tree (MomentState mirrors the param
+shapes; 8-bit states are flat [nblocks, 256] and get ZeRO 'data' sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+# (pattern, spec-for-trailing-dims); leading L dim (if rank is +1) gets None.
+# Specs are written for the *unstacked* tensor rank.
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings: vocab-parallel over model axis
+    (r"embed$", ("model", None)),
+    (r"unembed$", (None, "model")),
+    (r"enc_pos$", (None, None)),
+    # attention (GQA + cross-attention)
+    (r"attn/w[qkv]$|xattn/w[qkv]$", (None, "model")),
+    (r"attn/wo$|xattn/wo$", ("model", None)),
+    (r"attn/b[qkv]$", ("model",)),
+    # MLA
+    (r"attn/wdq$|attn/wdkv$|attn/wkr$", (None, None)),
+    (r"attn/wuq$|attn/wuk$|attn/wuv$", (None, "model")),
+    (r"attn/(q|kv)_norm$", (None,)),
+    # dense MLPs
+    (r"mlp/w[gu1]$|shared/w[gu1]$", (None, "model")),
+    (r"mlp/w[d2]$|shared/w[d2]$", ("model", None)),
+    # MoE experts: expert-parallel; big expert counts shard E over
+    # (data x model) so 256-expert models distribute across the full pod
+    (r"moe/w[gu]$", (("data", "model"), None, None)),
+    (r"moe/wd$", (("data", "model"), None, None)),
+    (r"moe/router$", (None, None)),
+    # Mamba2
+    (r"mamba/win$", (None, "model")),
+    (r"mamba/wout$", ("model", None)),
+    (r"mamba/conv$", (None, "model")),
+    (r"mamba/(A_log|D|dt_bias)$", (None,)),
+    (r"mamba/norm$", (None,)),
+    # RWKV6
+    (r"mix/w[rkvg]$|mix/wo$|mix/cr$", (None, "model")),
+    (r"mix/ck$", (None, "model")),
+    (r"mix/cv$", ("model", None)),
+    (r"mix/w_lora_a$", (None, None)),
+    (r"mix/w_lora_b$", (None, None)),
+    (r"mix/u$", (None, None)),
+    (r"mix/(mix_rkvwg|mix_cm|w0|ln_x)$", None),  # replicate small vectors
+    # norms and everything small: replicate
+    (r"ln", None),
+]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return mesh.shape.get(axis, 1) if isinstance(mesh.shape, dict) else \
+        mesh.shape[axis]
+
+
+def _fit_axis(axis, dim: int, mesh: Mesh):
+    """Largest suffix/whole of the requested axis (or None) that divides."""
+    if axis is None:
+        return None
+    candidates = [axis]
+    if isinstance(axis, tuple):
+        # prefer the full product, then each single member (model first)
+        candidates += [a for a in reversed(axis)]
+    for cand in candidates:
+        csize = _axis_size(mesh, cand)
+        ok = dim % csize == 0
+        if isinstance(cand, tuple):
+            ok = ok and all(a in mesh.axis_names for a in cand)
+        else:
+            ok = ok and (cand in mesh.axis_names)
+        if ok and csize > 1:
+            return cand
+    return None
+
+
+def spec_for_param(path: str, shape: tuple[int, ...],
+                   mesh: Mesh) -> P:
+    for pat, trailing in _RULES:
+        if re.search(pat, path):
+            if trailing is None:
+                return P()
+            rank = len(shape)
+            spec = list(trailing)
+            # leading stack dims (L, or none) -> None
+            while len(spec) < rank:
+                spec.insert(0, None)
+            spec = spec[-rank:] if len(spec) > rank else spec
+            out = [_fit_axis(ax, dim, mesh) for ax, dim in zip(spec, shape)]
+            return P(*out)
+    return P()  # default: replicate
+
+
+def zero_spec(spec: P, shape: tuple[int, ...], mesh: Mesh,
+              enable: bool = True) -> P:
+    """ZeRO: additionally shard a replicated axis over the *unused* dp axes.
+
+    Applied to optimizer moments (and optionally params for ZeRO-3).
+    Picks the first unsharded dim divisible by the free dp extent.
+    """
+    if not enable:
+        return spec
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    used: set = set()
+    for ax in spec_t:
+        if isinstance(ax, tuple):
+            used.update(ax)
+        elif ax is not None:
+            used.add(ax)
+    dps = tuple(a for a in dp_axes(mesh) if a not in used)
+    if not dps:
+        return P(*spec_t)
+    dp_n = int(np.prod([mesh.shape[a] for a in dps]))
+    out = list(spec_t)
+    for i, (ax, dim) in enumerate(zip(spec_t, shape)):
+        if ax is None and dim % dp_n == 0:
+            out[i] = dps if len(dps) > 1 else dps[0]
+            return P(*out)
+    return P(*spec_t)
+
+
+def param_specs(params: PyTree, mesh: Mesh) -> PyTree:
+    def one(path, x):
+        return spec_for_param(_path_str(path), x.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_specs(opt_state: PyTree, param_spec_tree: PyTree, mesh: Mesh,
+                    zero: bool = True) -> PyTree:
+    """Moments follow the param spec (+ZeRO); 8-bit blocks shard over data."""
+    from ..optim import MomentState
+
+    dps = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dps]))
+    flat_p, treedef = jax.tree.flatten(param_spec_tree,
+                                       is_leaf=lambda x: isinstance(x, P))
+    flat_mv = treedef.flatten_up_to(opt_state["mv"])
+
+    def mv_spec(pspec: P, mv: MomentState):
+        if mv.m_scale is not None:
+            # shape-preserving 8-bit moments: int8 inherits the param spec;
+            # the per-block scale drops the last-axis sharding if the block
+            # count no longer divides the axis extent
+            qspec = zero_spec(pspec, mv.m.shape, mesh, enable=zero)
+            qt = tuple(qspec) + (None,) * (len(mv.m.shape) - len(tuple(qspec)))
+            last = qt[-1]
+            s_shape = mv.m_scale.shape
+            s_last = _fit_axis(last, s_shape[-1], mesh) if last else None
+            sspec = P(*(qt[:-1] + (s_last,)))
+            return MomentState(qspec, qspec, sspec, sspec)
+        mspec = zero_spec(pspec, mv.m.shape, mesh, enable=zero)
+        return MomentState(mspec, mspec)
+
+    mv_specs = treedef.unflatten(
+        [mv_spec(p, mv) for p, mv in zip(flat_p, flat_mv)])
+    return {"mv": mv_specs, "step": P()}
+
+
+def batch_specs(batch_shapes: dict, mesh: Mesh) -> dict:
+    """Inputs: shard batch over dp axes when divisible, else sequence."""
+    dps = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dps]))
+    dp = dps if len(dps) > 1 else dps[0]
+    out = {}
+    for k, sds in batch_shapes.items():
+        shape = sds.shape
+        if len(shape) == 0:
+            out[k] = P()
+        elif shape[0] % dp_n == 0:
+            out[k] = P(dp, *([None] * (len(shape) - 1)))
+        elif len(shape) >= 2 and shape[1] % dp_n == 0:
+            out[k] = P(None, dp, *([None] * (len(shape) - 2)))
+        else:
+            out[k] = P(*([None] * len(shape)))
+    return out
+
+
+def cache_specs_tree(caches: PyTree, mesh: Mesh) -> PyTree:
+    """Decode caches: [L, B, S, H, D]-ish — shard B over dp, heads/features
+    over model when divisible (best-effort, per-leaf)."""
+    dps = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dps]))
+    model_n = mesh.shape["model"]
+    dp = dps if len(dps) > 1 else dps[0]
+
+    def one(x):
+        shape = x.shape
+        spec = [None] * len(shape)
+        # batch dim is axis 1 for stacked caches [L, B, ...], else 0
+        bdim = 1 if len(shape) >= 2 else 0
+        if len(shape) > bdim and shape[bdim] % dp_n == 0:
+            spec[bdim] = dp
+        # model axis: try trailing dims (heads or features), prefer axis -2
+        for cand in (len(shape) - 2, len(shape) - 1):
+            if cand <= bdim or cand < 0:
+                continue
+            if spec[cand] is None and shape[cand] % model_n == 0:
+                spec[cand] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree.map(one, caches)
+
+
+def to_named(tree_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))

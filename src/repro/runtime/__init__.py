@@ -1,0 +1,4 @@
+"""Fault-tolerant training runtime (host-side orchestration via autodec EDTs)."""
+from .driver import DriverConfig, TrainDriver
+
+__all__ = ["TrainDriver", "DriverConfig"]

@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,D", [
+    (1, 128, 128, 2, 2, 64),     # MHA, single block
+    (2, 256, 256, 4, 2, 64),     # GQA 2:1, multi-block
+    (1, 384, 384, 3, 1, 128),    # GQA 3:1, D=128, odd block count
+], ids=["mha128", "gqa256", "gqa384d128"])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, Hkv, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Sq, H, D), dtype)
+    k = _rand(ks[1], (B, Skv, Hkv, D), dtype)
+    v = _rand(ks[2], (B, Skv, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = _rand(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("B,S,H,D,chunk", [
+    (1, 32, 1, 8, 8),
+    (2, 64, 2, 16, 16),
+    (1, 128, 2, 64, 64),
+], ids=["tiny", "small", "real64"])
+def test_wkv6_matches_ref(B, S, H, D, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = _rand(ks[0], (B, S, H, D), dtype)
+    k = _rand(ks[1], (B, S, H, D), dtype)
+    v = _rand(ks[2], (B, S, H, D), dtype)
+    # decays in (0,1), realistic RWKV range
+    w = jax.nn.sigmoid(_rand(ks[3], (B, S, H, D), jnp.float32) - 1.0
+                       ).astype(dtype)
+    u = 0.1 * jax.random.normal(ks[4], (H, D), jnp.float32)
+    out, st = ops.wkv6(r, k, v, w, u, chunk=chunk)
+    want, want_st = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_st),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+def test_wkv6_state_handoff():
+    """Running two halves with the carried state == running the whole."""
+    B, S, H, D = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = _rand(ks[0], (B, S, H, D), jnp.float32)
+    k = _rand(ks[1], (B, S, H, D), jnp.float32)
+    v = _rand(ks[2], (B, S, H, D), jnp.float32)
+    w = jax.nn.sigmoid(_rand(ks[3], (B, S, H, D), jnp.float32))
+    u = 0.1 * jax.random.normal(ks[4], (H, D), jnp.float32)
+    full, _ = ops.wkv6(r, k, v, w, u, chunk=16)
+    h = S // 2
+    first, st = ops.wkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, chunk=16)
+    second, _ = ops.wkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u,
+                         init_state=st, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([first, second], 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 1, 16, 8, 8),
+    (2, 64, 2, 32, 16, 16),
+    (1, 128, 4, 64, 64, 32),
+], ids=["tiny", "small", "real"])
+def test_ssd_matches_ref(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = _rand(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, H), jnp.float32)) * 0.5
+    A = -jnp.exp(0.2 * jax.random.normal(ks[2], (H,), jnp.float32))
+    Bm = _rand(ks[3], (B, S, N), dtype)
+    Cm = _rand(ks[4], (B, S, N), dtype)
+    y, st = ops.ssd(x, dt.astype(jnp.float32), A, Bm, Cm, chunk=chunk)
+    want, want_st = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_st),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+def test_ssd_state_handoff():
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = _rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, H), jnp.float32)) * 0.5
+    A = -jnp.exp(0.2 * jax.random.normal(ks[2], (H,), jnp.float32))
+    Bm = _rand(ks[3], (B, S, N), jnp.float32)
+    Cm = _rand(ks[4], (B, S, N), jnp.float32)
+    full, _ = ops.ssd(x, dt, A, Bm, Cm, chunk=16)
+    h = S // 2
+    y1, st = ops.ssd(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], chunk=16)
+    y2, _ = ops.ssd(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:],
+                    init_state=st, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+def test_model_ssd_scan_matches_kernel():
+    """The model's pure-lax chunked SSD == the Pallas kernel == the ref."""
+    from repro.models.ssm import _ssd_chunk_scan
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    x = _rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, H), jnp.float32)) * 0.5
+    A = -jnp.exp(0.2 * jax.random.normal(ks[2], (H,), jnp.float32))
+    Bm = _rand(ks[3], (B, S, N), jnp.float32)
+    Cm = _rand(ks[4], (B, S, N), jnp.float32)
+    y_model, st_model = _ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=16)
+    y_ref, st_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_model), np.asarray(st_ref),
+                               rtol=1e-3, atol=1e-3)

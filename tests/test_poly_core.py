@@ -1,0 +1,209 @@
+"""Unit + property tests for the exact polyhedral engine (paper §3)."""
+import itertools
+from fractions import Fraction as F
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.poly import (LoopNest, Polyhedron, Tiling, lp_feasible,
+                             lp_max, lp_min, make_counting_function,
+                             minkowski_sum_box_exact, project_out,
+                             tile_dependence, tile_dependence_projection,
+                             tile_domain)
+
+# ----------------------------------------------------------------- LP
+
+
+def test_lp_basic():
+    rows = [(F(1), F(0), F(0)), (F(-1), F(0), F(10)),
+            (F(0), F(1), F(-2)), (F(0), F(-1), F(5))]
+    assert lp_max(rows, 2, [1, 1]).value == 15
+    assert lp_min(rows, 2, [1, 1]).value == 2
+    assert lp_feasible(rows, 2)
+    assert not lp_feasible(rows + [(F(1), F(0), F(-20))], 2)
+
+
+def test_lp_unbounded():
+    rows = [(F(1), F(0))]  # x >= 0
+    assert lp_max(rows, 1, [1]).status == "unbounded"
+    assert lp_min(rows, 1, [1]).value == 0
+
+
+def test_lp_negative_rhs_phase1():
+    # x >= 5 (written as x - 5 >= 0 -> needs phase 1 after standardization)
+    rows = [(F(1), F(-5)), (F(-1), F(9))]
+    r = lp_min(rows, 1, [1])
+    assert r.status == "optimal" and r.value == 5
+
+
+# ------------------------------------------------------------ polyhedron
+
+
+def tri(N=None):
+    """0 <= i <= j <= N-1 with N symbolic."""
+    return Polyhedron.from_ineqs(("i", "j"), ("N",), [
+        (1, 0, 0, 0), (-1, 1, 0, 0), (0, -1, 1, -1)])
+
+
+def test_membership_and_empty():
+    P = tri()
+    assert P.contains_point((0, 0), (4,))
+    assert P.contains_point((2, 3), (4,))
+    assert not P.contains_point((3, 2), (4,))
+    assert not P.is_empty()
+    assert P.add_ineq((1, 0, 0, -100)).add_ineq((-1, 0, 0, 50)).is_empty()
+
+
+def test_projection_triangle():
+    P = tri()
+    Q = project_out(P, [1])  # exists j
+    assert Q.contains_point((0,), (4,)) and Q.contains_point((3,), (4,))
+    assert not Q.contains_point((4,), (4,))
+
+
+def test_equalities_gaussian_elim():
+    # line i = j inside a box, project out j -> segment
+    P = Polyhedron.from_ineqs(("i", "j"), (), [
+        (1, 0, 0), (-1, 0, 5), (0, 1, 0), (0, -1, 5)], eqs=[(1, -1, 0)])
+    Q = project_out(P, [1])
+    lo, hi = Q.dim_bounds(0)
+    assert (lo, hi) == (0, 5)
+
+
+def test_scanning_matches_bruteforce():
+    P = tri()
+    pts = set(LoopNest(P).iterate({"N": 5}))
+    brute = {(i, j) for i in range(5) for j in range(5)
+             if 0 <= i <= j <= 4}
+    assert pts == brute
+    assert LoopNest(P).count({"N": 5}) == len(brute)
+
+
+def test_scanning_guards():
+    # family: {i : 0 <= i < N and N <= 3}; for N=5 it must be empty
+    P = Polyhedron.from_ineqs(("i",), ("N",), [
+        (1, 0, 0), (-1, 1, -1), (0, -1, 3)])
+    nest = LoopNest(P)
+    assert nest.count({"N": 5}) == 0
+    assert nest.count({"N": 3}) == 3
+
+
+# -------------------------------------------------------- §3 compression
+
+def _dep_example():
+    """(i,j) -> (i, j+1) inside the triangle; dims (is, js, it, jt)."""
+    P = tri()
+    src = P.rename(dim_names=("is_", "js")).add_dims(("it", "jt"))
+    tgt = P.rename(dim_names=("it", "jt")).add_dims(("is_", "js"), front=True)
+    return (src.intersect(tgt)
+            .add_eq((1, 0, -1, 0, 0, 0))
+            .add_eq((0, 1, 0, -1, 0, 1)))
+
+
+@pytest.mark.parametrize("gs,gt", [((2, 2), (2, 2)), ((2, 3), (2, 3)),
+                                   ((1, 4), (1, 4)), ((3, 1), (3, 1))])
+def test_compression_equals_projection(gs, gt):
+    """THE theorem: compression+exact-sum == FM projection (rationally)."""
+    delta = _dep_example()
+    a = tile_dependence(delta, 2, Tiling(gs), Tiling(gt), method="exact")
+    b = tile_dependence_projection(delta, 2, Tiling(gs), Tiling(gt))
+    assert a.equals(b)
+
+
+@pytest.mark.parametrize("g", [(2, 2), (3, 2), (4, 1)])
+def test_inflation_superset_and_same_integers(g):
+    delta = _dep_example()
+    infl = tile_dependence(delta, 2, Tiling(g), Tiling(g), method="inflate")
+    exact = tile_dependence(delta, 2, Tiling(g), Tiling(g), method="exact")
+    assert infl.contains(exact)
+    # constraint count: inflation must not add constraints (no vertex blowup)
+    base = tile_dependence(delta, 2, Tiling(g), Tiling(g), method="inflate")
+    assert len(infl.ineqs) <= len(exact.ineqs) + len(exact.eqs) * 2 + 4
+
+
+def test_tile_domain_integers():
+    P = tri()
+    td = tile_domain(P, Tiling((2, 2)))
+    tiles = set(LoopNest(td).iterate({"N": 4}))
+    # brute force: tiles containing at least one point
+    brute = {(i // 2, j // 2) for i in range(4) for j in range(4)
+             if 0 <= i <= j <= 3}
+    assert tiles == brute
+
+
+def test_minkowski_box_exact_simple():
+    P = Polyhedron.box(("x",), [0], [3])
+    S = minkowski_sum_box_exact(P, [F(-1, 2)], [F(0)])
+    lo, hi = S.dim_bounds(0)
+    assert (lo, hi) == (F(-1, 2), 3)
+
+
+# --------------------------------------------------- hypothesis properties
+
+coeff = st.integers(-3, 3)
+const = st.integers(-4, 4)
+
+
+@st.composite
+def bounded_dep_polyhedron(draw):
+    """A bounded 4-dim (2 src + 2 tgt) dependence polyhedron + tilings."""
+    rows = []
+    n_extra = draw(st.integers(1, 4))
+    for _ in range(n_extra):
+        r = [draw(coeff) for _ in range(4)] + [draw(const)]
+        rows.append(tuple(r))
+    box = Polyhedron.box(("a", "b", "c", "d"), [-3] * 4, [3] * 4)
+    P = box
+    for r in rows:
+        P = P.add_ineq(r)
+    gs = Tiling((draw(st.integers(1, 3)), draw(st.integers(1, 3))))
+    gt = Tiling((draw(st.integers(1, 3)), draw(st.integers(1, 3))))
+    return P, gs, gt
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(bounded_dep_polyhedron())
+def test_property_compression_equals_projection(data):
+    P, gs, gt = data
+    a = tile_dependence(P, 2, gs, gt, method="exact")
+    b = tile_dependence_projection(P, 2, gs, gt)
+    assert a.equals(b)
+    infl = tile_dependence(P, 2, gs, gt, method="inflate")
+    assert infl.contains(a)
+    # integer tile pairs agree between inflation and projection? inflation may
+    # add pairs (documented over-approximation); but projection pairs must all
+    # be included.
+    pa = set(LoopNest(b).iterate(()))
+    pi = set(LoopNest(infl).iterate(()))
+    assert pa <= pi
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(bounded_dep_polyhedron())
+def test_property_scan_count_consistency(data):
+    P, _, _ = data
+    nest = LoopNest(P)
+    pts = list(nest.iterate(()))
+    assert len(pts) == nest.count(())
+    for p in pts[:20]:
+        assert P.contains_point(p)
+
+
+def test_counting_function_strategies():
+    # rectangular -> enumerator
+    B = Polyhedron.box(("x", "y"), [0, 0], [4, 5])
+    cf = make_counting_function(B, count_dims=[0], fixed_dims=[1])
+    assert cf.strategy == "enumerator"
+    assert cf((2,), ()) == 5
+    # fixing j makes the i-range parametric-rectangular: still an enumerator,
+    # and it must evaluate correctly
+    cf2 = make_counting_function(tri(), count_dims=[0], fixed_dims=[1])
+    assert cf2.strategy == "enumerator"
+    assert cf2((3,), (5,)) == 4  # i in 0..3 for j=3
+    # a 2-dim triangular count (inner bound depends on outer dim) -> loop
+    cf3 = make_counting_function(tri(), count_dims=[0, 1], fixed_dims=[])
+    assert cf3.strategy == "loop"
+    assert cf3((), (5,)) == 15

@@ -17,6 +17,13 @@ from repro.core.programs import PROGRAMS
 
 TIMEOUT_S = 120.0
 
+# smoke mode: small, projection-friendly programs run in-process with no
+# subprocess or 120 s timeout — a sub-second sanity pass over the section.
+SMOKE_SUITE = [
+    ("stencil1d", (32, 32)),
+    ("diamond", (8, 8)),
+]
+
 SUITE = [
     # (program, tile sizes per statement-dim)
     ("stencil1d", (32, 32)),
@@ -58,10 +65,11 @@ def _timed_projection(name, dep_idx, tiles) -> tuple[float, bool]:
     return q.get(), False
 
 
-def run(emit=print):
+def run(emit=print, smoke: bool = False):
+    suite = SMOKE_SUITE if smoke else SUITE
     emit("name,deps,t_compression_ms,t_projection_ms,speedup,note")
     speedups = []
-    for name, tiles in SUITE:
+    for name, tiles in suite:
         prog = PROGRAMS[name]()
         g = Tiling(tuple(tiles))
         t_c = t_p = 0.0
@@ -70,7 +78,12 @@ def run(emit=print):
             t0 = time.perf_counter()
             tile_dependence(dep.delta, dep.src_ndim, g, g, method="inflate")
             t_c += time.perf_counter() - t0
-            dt, timed_out = _timed_projection(name, i, tiles)
+            if smoke:
+                t0 = time.perf_counter()
+                tile_dependence_projection(dep.delta, dep.src_ndim, g, g)
+                dt, timed_out = time.perf_counter() - t0, False
+            else:
+                dt, timed_out = _timed_projection(name, i, tiles)
             t_p += dt
             if timed_out:
                 note = "projection-TIMEOUT(capped)"

@@ -20,13 +20,18 @@ CASES = [
     ("stencil1d", {"S": Tiling((4, 8))}, {"T": 24, "N": 96}),
     ("pipeline", {"S": Tiling((1, 1))}, {"M": 24, "S": 8}),
 ]
+SMOKE_CASES = [
+    ("diamond", {"S": Tiling((1, 1))}, {"K": 10}),
+    ("pipeline", {"S": Tiling((1, 1))}, {"M": 8, "S": 4}),
+]
 MODELS_ = ("prescribed", "tags1", "tags2", "counted", "autodec")
 
 
-def run(emit=print):
+def run(emit=print, smoke: bool = False):
+    cases = SMOKE_CASES if smoke else CASES
     emit("program,model,n_tasks,makespan,startup_ops,spatial_peak")
     out = {}
-    for name, tiling, params in CASES:
+    for name, tiling, params in cases:
         g = TiledTaskGraph(PROGRAMS[name](), tiling)
         for model in MODELS_:
             res = run_model(model, g, params, workers=8, setup_cost=0.05)
@@ -37,7 +42,7 @@ def run(emit=print):
         t0 = time.perf_counter()
         run_graph_threaded(g, params, workers=4)
         emit(f"{name},autodec_threads_wallclock,-,{time.perf_counter()-t0:.3f}s,-,-")
-    for name, *_ in CASES:
+    for name, *_ in cases:
         sp = out[(name, "prescribed")] / out[(name, "autodec")]
         emit(f"# {name}: autodec vs prescribed makespan speedup {sp:.2f}x")
     return out

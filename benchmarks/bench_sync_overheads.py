@@ -12,15 +12,17 @@ from repro.core.poly import Tiling
 from repro.core.programs import PROGRAMS
 
 SIZES = (8, 16, 32)
+SMOKE_SIZES = (4, 8)
 
 
-def run(emit=print):
+def run(emit=print, smoke: bool = False):
+    sizes = SMOKE_SIZES if smoke else SIZES
     g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))})
     emit("model,K,n_tasks,startup_ops,spatial_peak,inflight_tasks_peak,"
          "inflight_deps_peak,garbage_peak,makespan")
     rows = {}
     for model in MODELS:
-        for K in SIZES:
+        for K in sizes:
             params = {"K": K}
             res = run_model(model, g, params, workers=8)
             s = res.counters.summary()
@@ -29,11 +31,14 @@ def run(emit=print):
             emit(f"{model},{K},{n},{s['startup_ops']},{s['spatial_peak']},"
                  f"{s['inflight_tasks_peak']},{s['inflight_deps_peak']},"
                  f"{s['garbage_peak']},{s['makespan']:.2f}")
-    # growth factors n(32)^2/n(8)^2 = 16, n ratio = 16
+    # growth factors between the smallest and largest size (tasks scale with
+    # the square of the K ratio on the diamond grid)
+    lo, hi = sizes[0], sizes[-1]
+    ratio = (hi * hi) // (lo * lo)
     for model in MODELS:
-        a, b = rows[(model, 8)], rows[(model, 32)]
+        a, b = rows[(model, lo)], rows[(model, hi)]
         emit(f"# {model}: startup x{b['startup_ops']/max(1,a['startup_ops']):.1f}, "
              f"spatial x{b['spatial_peak']/max(1,a['spatial_peak']):.1f}, "
              f"garbage x{b['garbage_peak']/max(1,a['garbage_peak']):.1f} "
-             f"(tasks x16)")
+             f"(tasks x{ratio})")
     return rows

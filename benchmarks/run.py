@@ -1,16 +1,24 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only compile|sync|executor|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only SECTION] [--smoke]
 
 Sections:
   compile   — §5.1 Fig 6: compression vs projection dependence-compute time
+  taskgen   — task-generation throughput: compiled vs Fraction scanning
+              backend on materialize / pred_count / roots (graphs verified
+              identical)
   sync      — §2 Table 2: overhead counters per synchronization model
   executor  — §5.2: makespan comparison across models (+ threaded autodec)
   roofline  — §Roofline terms from the dry-run artifacts (if present)
+
+``--smoke`` runs a fast subset of every section (small suites, no
+subprocess projection timeouts) — a correctness-and-entry-point check that
+finishes in well under a minute; full runs remain the default.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -18,14 +26,18 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=[None, "compile", "sync", "executor", "roofline"])
+                    choices=[None, "compile", "taskgen", "sync", "executor",
+                             "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset of each section (sub-minute total)")
     args = ap.parse_args(argv)
 
     from . import (bench_compile, bench_executor, bench_roofline,
-                   bench_sync_overheads)
+                   bench_sync_overheads, bench_taskgen)
 
     sections = {
         "compile": bench_compile.run,
+        "taskgen": bench_taskgen.run,
         "sync": bench_sync_overheads.run,
         "executor": bench_executor.run,
         "roofline": bench_roofline.run,
@@ -36,8 +48,11 @@ def main(argv=None) -> int:
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)
         t0 = time.time()
+        kw = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kw["smoke"] = True
         try:
-            fn()
+            fn(**kw)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"# section {name} failed: {e!r}")
             rc = 1

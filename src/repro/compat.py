@@ -1,0 +1,38 @@
+"""Version-compat shims for the installed jax.
+
+The kernels/parallel layers were written against newer jax spellings
+(``jax.shard_map`` with ``check_vma``, ``pltpu.CompilerParams``); older
+releases ship ``jax.experimental.shard_map.shard_map`` with ``check_rep``
+and ``pltpu.TPUCompilerParams``.  These helpers resolve whichever the
+installed jax provides, so the same source runs on both sides of the
+renames without pinning a jax version (nothing may be pip-installed in the
+target container).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` / ``pltpu.TPUCompilerParams`` (renamed)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map(check_vma=)`` / experimental ``shard_map(check_rep=)``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    params = inspect.signature(sm).parameters
+    if "check_vma" in params:
+        kw["check_vma"] = check
+    elif "check_rep" in params:
+        kw["check_rep"] = check
+    return sm(f, **kw)

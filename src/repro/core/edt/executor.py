@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -90,7 +91,9 @@ class Sim:
         self._heap: list = []
         self._seq = itertools.count()
         self.free = workers
-        self.ready: list = []  # FIFO of (task_key, run_fn)
+        # FIFO of (task_key, run_fn); deque so dispatch is O(1) per task
+        # (list.pop(0) made the ready queue O(n^2) at scale).
+        self.ready: deque = deque()
         self.gate_open = True
         self.counters = Counters()
         self._started_any = False
@@ -144,7 +147,7 @@ class Sim:
         if not self.gate_open:
             return
         while self.free > 0 and self.ready:
-            key, run_fn = self.ready.pop(0)
+            key, run_fn = self.ready.popleft()
             self.free -= 1
             self.running += 1
             self.exec_order.append(key)

@@ -121,7 +121,7 @@ def _wrap_starts(sim: Sim, start_of: dict[TaskId, Callable]) -> None:
         if not sim.gate_open:
             return
         while sim.free > 0 and sim.ready:
-            key, run_fn = sim.ready.pop(0)
+            key, run_fn = sim.ready.popleft()
             sim.free -= 1
             sim.running += 1
             sim.exec_order.append((key, sim.now))

@@ -29,8 +29,26 @@ from ..poly import (CountingFunction, LoopNest, Polyhedron, Tiling,
                     make_counting_function, project_onto, tile_dependence,
                     tile_domain)
 from ..poly.counting import dims_to_params
+from ..poly.scanning import _row_ints
 
 TaskId = tuple[str, tuple[int, ...]]  # (statement name, tile coords)
+
+
+def _int_rows(poly: Polyhedron) -> tuple[tuple, tuple]:
+    """Constraint rows scaled to plain ints (for fast point containment)."""
+    return (tuple(_row_ints(r) for r in poly.ineqs),
+            tuple(_row_ints(r) for r in poly.eqs))
+
+
+def _contains_int(ineqs: tuple, eqs: tuple, col: tuple) -> bool:
+    """``col`` = (dims..., params..., 1) against pre-scaled integer rows."""
+    for r in ineqs:
+        if sum(a * b for a, b in zip(r, col)) < 0:
+            return False
+    for r in eqs:
+        if sum(a * b for a, b in zip(r, col)) != 0:
+            return False
+    return True
 
 
 @dataclass(frozen=True)
@@ -85,17 +103,31 @@ class _TiledDep:
     succ_fn: CountingFunction
     # predecessor loop / §4.3 count function: fix target tile -> iterate sources
     pred_fn: CountingFunction
+    # delta_t constraint rows as plain ints (fast self-pair containment)
+    int_ineqs: tuple = ()
+    int_eqs: tuple = ()
 
 
 class TiledTaskGraph:
-    """Tile-level EDT graph with paper-§4 generated-code primitives."""
+    """Tile-level EDT graph with paper-§4 generated-code primitives.
+
+    ``backend`` selects the scanning evaluation path for every generated
+    loop (tile nests, get/put loops, counters): ``compiled`` (default,
+    integer codegen) or ``fraction`` (the retained reference path) — see
+    :mod:`repro.core.poly.scanning`.  Per-``params`` scan state (compiled
+    loop bodies, root projections, containment rows) is computed once and
+    shared across all tasks, so ``materialize``/``roots``/``pred_count``
+    amortize instead of re-deriving per task.
+    """
 
     def __init__(self, program: PolyhedralProgram,
                  tilings: dict[str, Tiling],
-                 method: str = "inflate"):
+                 method: str = "inflate",
+                 backend: str = "compiled"):
         self.program = program
         self.tilings = tilings
         self.method = method
+        self.backend = backend
         self.param_names = program.param_names
 
         # Tile iteration domains (task creation loops, Fig 3).
@@ -104,7 +136,7 @@ class TiledTaskGraph:
         for name, st in program.statements.items():
             td = tile_domain(st.domain, tilings[name], method=method)
             self.tile_domains[name] = td
-            self.tile_nests[name] = LoopNest(td)
+            self.tile_nests[name] = LoopNest(td, backend=backend)
 
         # Inter-tile dependences by compression (§3), intersected with the
         # product of tile domains for signal/count consistency.
@@ -126,17 +158,26 @@ class TiledTaskGraph:
             eff = dt.intersect(prod)
             src_dims = list(range(ns))
             tgt_dims = list(range(ns, eff.ndim))
+            ii, ie = _int_rows(eff)
             td = _TiledDep(
                 dep=dep,
                 delta_t=eff,
                 succ_fn=make_counting_function(eff, count_dims=tgt_dims,
-                                               fixed_dims=src_dims),
+                                               fixed_dims=src_dims,
+                                               backend=backend),
                 pred_fn=make_counting_function(eff, count_dims=src_dims,
-                                               fixed_dims=tgt_dims),
+                                               fixed_dims=tgt_dims,
+                                               backend=backend),
+                int_ineqs=ii,
+                int_eqs=ie,
             )
             self.tiled_deps.append(td)
             self._out[dep.src].append(td)
             self._in[dep.tgt].append(td)
+        # roots_polyhedra() caches (the projections are pure FM work that
+        # depends only on the graph, not on params).
+        self._roots_projs: Optional[dict[str, list[Polyhedron]]] = None
+        self._roots_rows: dict[str, list[tuple[tuple, tuple]]] = {}
 
     # ------------------------------------------------------------- tasks
     def tasks(self, params: dict[str, int]) -> Iterator[TaskId]:
@@ -176,12 +217,15 @@ class TiledTaskGraph:
     def pred_count(self, task: TaskId, params: dict[str, int]) -> int:
         """§4.3 predecessor-count function (counts (dep, src-tile) pairs)."""
         name, t = task
-        pv = self._pv(params)
+        return self._pred_count_pv(name, t, self._pv(params))
+
+    def _pred_count_pv(self, name: str, t: tuple, pv: list[int]) -> int:
+        """pred_count with a pre-resolved parameter vector (hot path)."""
         total = 0
         for td in self._in[name]:
             c = td.pred_fn(t, pv)
-            if td.dep.src == td.dep.tgt and td.delta_t.contains_point(
-                    tuple(t) + tuple(t), pv):
+            if td.dep.src == td.dep.tgt and _contains_int(
+                    td.int_ineqs, td.int_eqs, tuple(t) + tuple(t) + tuple(pv) + (1,)):
                 c -= 1  # exclude the tile-level self pair
             total += c
         return total
@@ -192,12 +236,14 @@ class TiledTaskGraph:
 
     # ------------------------------------------------------------- roots
     def roots_polyhedra(self) -> dict[str, list[Polyhedron]]:
-        """§4.3: project each Δ_T onto destination dims.
+        """§4.3: project each Δ_T onto destination dims (computed once).
 
         The set of tasks *with* predecessors per statement; roots = tile
         domain minus their union (set difference is evaluated pointwise since
         the difference is generally non-convex).
         """
+        if self._roots_projs is not None:
+            return self._roots_projs
         out: dict[str, list[Polyhedron]] = {n: [] for n in self.program.statements}
         for td in self.tiled_deps:
             ns = self.tilings[td.dep.src].ndim
@@ -208,34 +254,63 @@ class TiledTaskGraph:
                 pass
             proj = project_onto(td.delta_t, tgt_dims)
             out[td.dep.tgt].append(proj)
+        self._roots_projs = out
+        self._roots_rows = {n: [_int_rows(p) for p in projs]
+                            for n, projs in out.items()}
         return out
 
     def roots(self, params: dict[str, int]) -> Iterator[TaskId]:
         """Tasks with no predecessors (the master's scan, made O(1)-startup by
         preschedule in the autodec model)."""
-        with_preds = self.roots_polyhedra()
+        self.roots_polyhedra()
         pv = self._pv(params)
+        tail = tuple(pv) + (1,)
         for name in self.program.statements:
-            projs = with_preds[name]
+            rows = self._roots_rows[name]
             for t in self.tile_nests[name].iterate(pv):
-                if any(p.contains_point(t, pv) for p in projs):
+                col = tuple(t) + tail
+                if any(_contains_int(ii, ie, col) for ii, ie in rows):
                     # may still be a root if the only "predecessor" was the
                     # self pair; fall back to the exact count.
-                    if self.pred_count((name, t), params) == 0:
+                    if self._pred_count_pv(name, t, pv) == 0:
                         yield (name, t)
                 else:
                     yield (name, t)
 
     # ------------------------------------------------------------ materialize
     def materialize(self, params: dict[str, int]) -> "MaterializedGraph":
-        """Explicit adjacency (for tests / the prescribed model / wavefronts)."""
-        tasks = list(self.tasks(params))
+        """Explicit adjacency (for tests / the prescribed model / wavefronts).
+
+        Batched: the parameter vector, compiled scan functions, and
+        per-dependence loop state are resolved once per call, then the put
+        loops stream over all tasks of a statement — instead of re-entering
+        ``successors`` (and re-binding scan state) per task.  The resulting
+        task list, per-task successor order, and pred counts are identical
+        to the per-task path.
+        """
+        pv = self._pv(params)
+        tasks: list[TaskId] = []
+        by_stmt: dict[str, list[TaskId]] = {}
+        for name in self.program.statements:
+            ts = [(name, t) for t in self.tile_nests[name].iterate(pv)]
+            by_stmt[name] = ts
+            tasks.extend(ts)
         succ: dict[TaskId, list[TaskId]] = {t: [] for t in tasks}
-        pred_n: dict[TaskId, int] = {t: 0 for t in tasks}
-        for t in tasks:
-            for s in self.successors(t, params):
-                succ[t].append(s)
-                pred_n[s] += 1
+        pred_n: dict[TaskId, int] = dict.fromkeys(tasks, 0)
+        for name, ts in by_stmt.items():
+            for td in self._out[name]:
+                tgt_name = td.dep.tgt
+                same = td.dep.src == tgt_name
+                points = td.succ_fn.points
+                for task in ts:
+                    t = task[1]
+                    out = succ[task]
+                    for tgt in points(t, pv):
+                        if same and tgt == t:
+                            continue
+                        s = (tgt_name, tgt)
+                        out.append(s)
+                        pred_n[s] += 1
         return MaterializedGraph(tasks, succ, pred_n)
 
     def _pv(self, params: dict[str, int]) -> list[int]:

@@ -15,7 +15,11 @@ in one of two forms, chosen by a shape heuristic:
 
 We realize both: the target tile coordinates are moved into the *parameter*
 space of the polyhedron, so the per-level Fourier-Motzkin systems are computed
-once at "compile time", and each call is a cheap bound evaluation.
+once at "compile time", and each call is a cheap bound evaluation.  With the
+default ``compiled`` scanning backend every call runs pure integer
+arithmetic (the bounds were normalized to ceil/floor-division form when the
+nest was built); ``backend="fraction"`` retains the reference rational path
+for the equivalence regression tests.
 """
 from __future__ import annotations
 
@@ -85,17 +89,19 @@ class CountingFunction:
 
 def make_counting_function(delta_t: Polyhedron, count_dims: Sequence[int],
                            fixed_dims: Sequence[int],
-                           strategy: str = "auto") -> CountingFunction:
+                           strategy: str = "auto",
+                           backend: str = "compiled") -> CountingFunction:
     """Build ``count(fixed_coords, params) -> |{count_dims points}|``.
 
     ``count_dims``/``fixed_dims`` partition the dims of ``delta_t``.
     For a predecessor counter on Δ_T(T_s, T_t): count_dims = source dims,
     fixed_dims = target dims.  Strategy 'auto' applies the paper's heuristic:
-    rectangular nest -> enumerator, else counting loop.
+    rectangular nest -> enumerator, else counting loop.  ``backend`` selects
+    the scanning evaluation path (see :mod:`.scanning`).
     """
     assert sorted(list(count_dims) + list(fixed_dims)) == list(range(delta_t.ndim))
     fam = dims_to_params(delta_t, fixed_dims)
-    nest = LoopNest(fam)
+    nest = LoopNest(fam, backend=backend)
     if strategy == "auto":
         strategy = "enumerator" if nest.is_rectangular() else "loop"
     return CountingFunction(nest=nest, strategy=strategy)

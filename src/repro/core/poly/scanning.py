@@ -7,6 +7,18 @@ Fourier-Motzkin projection of the polyhedron onto the outer dims, so that at
 "run time" (task execution) each level's bounds are cheap affine min/max
 evaluations — exactly like generated C loop bounds.
 
+Two evaluation backends share the same per-level systems:
+
+* ``compiled`` (default) — the projected bounds are normalized once, at
+  construction, into integer ``ceild``/``floord`` form (``-(rest // a)`` /
+  ``rest // a`` with ``a > 0``, and a unit-coefficient fast path that drops
+  the division entirely).  ``iterate``/``count`` then run *generated Python
+  source* — an actual loop nest compiled per polyhedron, with parameter-only
+  bounds hoisted out of the loops — so scanning behaves like the paper's
+  generated C loops: pure integer arithmetic, no per-point allocation.
+* ``fraction`` — the original per-call ``fractions.Fraction`` evaluation,
+  retained as the reference oracle for the equivalence regression tests.
+
 Scanning is exact over the integers: level-k bounds come from the rational
 projection, and integer-empty inner ranges simply produce empty loops.
 """
@@ -21,6 +33,16 @@ from .polyhedron import Polyhedron
 from .projection import project_out
 
 F0 = Fraction(0)
+
+BACKENDS = ("compiled", "fraction")
+
+
+def _row_ints(row) -> tuple[int, ...]:
+    """Scale a rational constraint row to integers (positive factor: exact)."""
+    den = 1
+    for c in row:
+        den = den * c.denominator // math.gcd(den, c.denominator)
+    return tuple(int(c * den) for c in row)
 
 
 @dataclass
@@ -39,10 +61,28 @@ class _Level:
         return self.k + 1
 
 
+@dataclass
+class _IntRow:
+    """One bound row in integer ceil/floor-division form.
+
+    ``rest = const + pre·prefix + par·params``; the bound contribution is
+    ``-(rest // a)`` for lowers, ``rest // a`` for uppers, with ``a > 0``.
+    ``pre`` is sparse ((outer-dim index, coeff) pairs) so rectangular rows
+    cost nothing per outer iteration.
+    """
+    a: int                          # positive divisor (1 = fast path)
+    pre: tuple[tuple[int, int], ...]  # nonzero outer-dim coefficients
+    par: tuple[int, ...]            # dense parameter coefficients
+    const: int
+
+
 class LoopNest:
     """Scan the integer points of ``poly`` in lexicographic dim order."""
 
-    def __init__(self, poly: Polyhedron, simplify: str = "auto"):
+    def __init__(self, poly: Polyhedron, simplify: str = "auto",
+                 backend: str = "compiled"):
+        assert backend in BACKENDS, backend
+        self.backend = backend
         self.poly = poly.canonical()
         self.ndim = poly.ndim
         self.nparam = poly.nparam
@@ -60,6 +100,7 @@ class LoopNest:
                 cur = project_out(cur, [k], simplify=simplify)
         if self.ndim == 0:
             self._guards = list(self.poly.all_rows_as_ineqs())
+            self._compile_static()
             return
         for k in range(self.ndim):
             sys_k = systems[k]
@@ -79,25 +120,93 @@ class LoopNest:
                     else:
                         self._guards.append(r)
             self.levels.append(_Level(lowers, uppers, k))
+        self._compile_static()
+
+    # ----------------------------------------------------- compile (integer)
+    def _compile_static(self) -> None:
+        """Normalize guards and per-level bounds to integer form, once."""
+        off = 1 if self.ndim else 0
+        self._int_guards: list[tuple[tuple[int, ...], int]] = []
+        for r in self._guards:
+            ir = _row_ints(r)
+            self._int_guards.append(
+                (ir[off:off + self.nparam], ir[-1]))
+        self._int_levels: list[tuple[list[_IntRow], list[_IntRow]]] = []
+        for level in self.levels:
+            k, poff = level.k, level.param_off
+            los, ups = [], []
+            for r in level.lowers:
+                ir = _row_ints(r)
+                los.append(_IntRow(
+                    a=ir[k],
+                    pre=tuple((j, ir[j]) for j in range(k) if ir[j]),
+                    par=ir[poff:poff + self.nparam],
+                    const=ir[-1]))
+            for r in level.uppers:
+                ir = _row_ints(r)
+                ups.append(_IntRow(
+                    a=-ir[k],
+                    pre=tuple((j, ir[j]) for j in range(k) if ir[j]),
+                    par=ir[poff:poff + self.nparam],
+                    const=ir[-1]))
+            self._int_levels.append((los, ups))
+        self._scan_fn = None   # generated lazily (codegen is not free)
+        self._count_fn = None
+        self._gen_source: Optional[str] = None
 
     def feasible(self, params) -> bool:
-        """Evaluate the pure-parameter guards."""
+        """Evaluate the pure-parameter guards (integer arithmetic)."""
         if self._infeasible:
             return False
         pv = self._param_vec(params)
-        off = 1 if self.ndim else 0
-        for r in self._guards:
-            v = r[-1]
-            for j in range(self.nparam):
-                v += r[off + j] * pv[j]
+        for par, const in self._int_guards:
+            v = const
+            for c, p in zip(par, pv):
+                if c:
+                    v += c * p
             if v < 0:
                 return False
         return True
 
     # ------------------------------------------------------------------ eval
-    def _bounds(self, level: _Level, prefix: list[int],
+    def _bounds(self, level: _Level, prefix: Sequence[int],
                 params: Sequence[int]) -> tuple[Optional[int], Optional[int]]:
         """Integer [lb, ub] for dim k given outer values; None = unbounded."""
+        if self.backend == "compiled":
+            return self._bounds_int(level.k, prefix, params)
+        return self._bounds_fraction(level, prefix, params)
+
+    def _bounds_int(self, k: int, prefix: Sequence[int],
+                    params: Sequence[int]) -> tuple[Optional[int], Optional[int]]:
+        """Compiled path: pure-integer ceil/floor division bound evaluation."""
+        los, ups = self._int_levels[k]
+        lb: Optional[int] = None
+        ub: Optional[int] = None
+        for r in los:
+            rest = r.const
+            for j, c in r.pre:
+                rest += c * prefix[j]
+            for c, p in zip(r.par, params):
+                if c:
+                    rest += c * p
+            v = -rest if r.a == 1 else -(rest // r.a)
+            if lb is None or v > lb:
+                lb = v
+        for r in ups:
+            rest = r.const
+            for j, c in r.pre:
+                rest += c * prefix[j]
+            for c, p in zip(r.par, params):
+                if c:
+                    rest += c * p
+            v = rest if r.a == 1 else rest // r.a
+            if ub is None or v < ub:
+                ub = v
+        return lb, ub
+
+    def _bounds_fraction(self, level: _Level, prefix: Sequence[int],
+                         params: Sequence[int]) -> tuple[Optional[int], Optional[int]]:
+        """Reference path: the original per-call Fraction evaluation."""
         k = level.k
         off = level.param_off
         lb: Optional[int] = None
@@ -122,13 +231,137 @@ class LoopNest:
             ub = v if ub is None else min(ub, v)
         return lb, ub
 
+    # --------------------------------------------------------------- codegen
+    def _rest_src(self, r: _IntRow) -> str:
+        terms = []
+        for j, c in enumerate(r.par):
+            if c:
+                terms.append(f"{c:+d}*p{j}")
+        for j, c in r.pre:
+            terms.append(f"{c:+d}*d{j}")
+        if r.const or not terms:
+            terms.append(f"{r.const:+d}")
+        return " ".join(terms)
+
+    def _bound_src(self, r: _IntRow, lower: bool) -> str:
+        rest = self._rest_src(r)
+        if lower:
+            return f"-({rest})" if r.a == 1 else f"-(({rest}) // {r.a})"
+        return f"({rest})" if r.a == 1 else f"({rest}) // {r.a}"
+
+    def _emit(self) -> str:
+        """Generate Python source for the scan and count loop nests.
+
+        Mirrors the paper's generated C loops: ``ceild``/``floord`` become
+        integer floor division, parameter-only bounds are hoisted to the
+        function prologue, and the innermost count level is closed-form.
+        """
+        n = self.ndim
+        head: list[str] = []
+        for j in range(self.nparam):
+            head.append(f"    p{j} = pv[{j}]")
+        guards = []
+        if self._infeasible:
+            guards.append("    if True:")
+        elif self._int_guards:
+            conds = []
+            for par, const in self._int_guards:
+                r = _IntRow(1, (), par, const)
+                conds.append(f"({self._rest_src(r)}) < 0")
+            guards.append(f"    if {' or '.join(conds)}:")
+        # per-level bound expressions, hoisting parameter-only rows
+        hoist: list[str] = []
+        lb_expr: list[Optional[str]] = []
+        ub_expr: list[Optional[str]] = []
+        for k in range(n):
+            los, ups = self._int_levels[k]
+            stat_l = [self._bound_src(r, True) for r in los if not r.pre]
+            dyn_l = [self._bound_src(r, True) for r in los if r.pre]
+            stat_u = [self._bound_src(r, False) for r in ups if not r.pre]
+            dyn_u = [self._bound_src(r, False) for r in ups if r.pre]
+            if stat_l:
+                src = stat_l[0] if len(stat_l) == 1 else "max(%s)" % ", ".join(stat_l)
+                hoist.append(f"    slb{k} = {src}")
+                dyn_l = [f"slb{k}"] + dyn_l
+            if stat_u:
+                src = stat_u[0] if len(stat_u) == 1 else "min(%s)" % ", ".join(stat_u)
+                hoist.append(f"    sub{k} = {src}")
+                dyn_u = [f"sub{k}"] + dyn_u
+            lb_expr.append(None if not dyn_l else
+                           (dyn_l[0] if len(dyn_l) == 1 else "max(%s)" % ", ".join(dyn_l)))
+            ub_expr.append(None if not dyn_u else
+                           (dyn_u[0] if len(dyn_u) == 1 else "min(%s)" % ", ".join(dyn_u)))
+
+        def body(kind: str) -> list[str]:
+            out: list[str] = [f"def __{kind}(pv):"]
+            out += head
+            if guards:
+                out.append(guards[0])
+                out.append("        return" if kind == "scan" else "        return 0")
+            if kind == "count":
+                out.append("    total = 0")
+            out += hoist
+            ind = "    "
+            last = n - 1
+            for k in range(n):
+                if lb_expr[k] is None or ub_expr[k] is None:
+                    nm = self.poly.dim_names[k]
+                    out.append(f"{ind}raise ValueError("
+                               f"\"dim {k} ({nm}) is unbounded\")")
+                    if kind == "scan":
+                        # unreachable, but forces generator semantics so an
+                        # empty outer range yields [] and a non-empty one
+                        # raises on first next() — like the fraction path
+                        out.append(f"{ind}yield ()")
+                    else:
+                        out.append("    return total")
+                    return out
+                if kind == "count" and k == last:
+                    out.append(f"{ind}__lo = {lb_expr[k]}")
+                    out.append(f"{ind}__hi = {ub_expr[k]}")
+                    out.append(f"{ind}if __hi >= __lo:")
+                    out.append(f"{ind}    total += __hi - __lo + 1")
+                else:
+                    out.append(f"{ind}for d{k} in range({lb_expr[k]}, "
+                               f"{ub_expr[k]} + 1):")
+                    ind += "    "
+            if kind == "scan":
+                tup = ", ".join(f"d{k}" for k in range(n)) + ("," if n == 1 else "")
+                out.append(f"{ind}yield ({tup})")
+            else:
+                out.append("    return total")
+            return out
+
+        return "\n".join(body("scan") + [""] + body("count")) + "\n"
+
+    def _compile_fns(self) -> None:
+        self._gen_source = self._emit()
+        ns: dict = {}
+        exec(compile(self._gen_source, f"<loopnest {self.poly.dim_names}>",
+                     "exec"), ns)
+        self._scan_fn = ns["__scan"]
+        self._count_fn = ns["__count"]
+
+    def generated_source(self) -> str:
+        """The generated Python loop nest (compiled backend; docs/debug)."""
+        if self._scan_fn is None and self.ndim:
+            self._compile_fns()
+        return self._gen_source or ""
+
+    # --------------------------------------------------------------- iterate
     def iterate(self, params: dict[str, int] | Sequence[int] = ()) -> Iterator[tuple[int, ...]]:
         """Yield every integer point (requires bounded dims)."""
-        if not self.feasible(params):
-            return
         pv = self._param_vec(params)
         if self.ndim == 0:
-            yield ()
+            return iter((((),) if self.feasible(pv) else ()))
+        if self.backend == "compiled":
+            if self._scan_fn is None:
+                self._compile_fns()
+            return self._scan_fn(pv)
+        return self._iterate_fraction(pv)
+
+    def _iterate_fraction(self, pv) -> Iterator[tuple[int, ...]]:
+        if not self.feasible(pv):
             return
         yield from self._rec(0, [], pv)
 
@@ -136,7 +369,7 @@ class LoopNest:
         if k == self.ndim:
             yield tuple(prefix)
             return
-        lb, ub = self._bounds(self.levels[k], prefix, pv)
+        lb, ub = self._bounds_fraction(self.levels[k], prefix, pv)
         if lb is None or ub is None:
             raise ValueError(f"dim {k} ({self.poly.dim_names[k]}) is unbounded")
         for v in range(lb, ub + 1):
@@ -146,15 +379,19 @@ class LoopNest:
 
     def count(self, params: dict[str, int] | Sequence[int] = ()) -> int:
         """Number of integer points (innermost level counted closed-form)."""
-        if not self.feasible(params):
-            return 0
         pv = self._param_vec(params)
         if self.ndim == 0:
-            return 1
+            return 1 if self.feasible(pv) else 0
+        if self.backend == "compiled":
+            if self._count_fn is None:
+                self._compile_fns()
+            return self._count_fn(pv)
+        if not self.feasible(pv):
+            return 0
         return self._count_rec(0, [], pv)
 
     def _count_rec(self, k: int, prefix: list[int], pv) -> int:
-        lb, ub = self._bounds(self.levels[k], prefix, pv)
+        lb, ub = self._bounds_fraction(self.levels[k], prefix, pv)
         if lb is None or ub is None:
             raise ValueError(f"dim {k} is unbounded; cannot count")
         if ub < lb:

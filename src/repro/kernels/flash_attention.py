@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -98,7 +100,7 @@ def flash_attention_hm(q, k, v, *, causal: bool = True, bq: int = 128,
             pltpu.VMEM((bq,), jnp.float32),       # l
             pltpu.VMEM((bq, D), jnp.float32),     # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, s0_ref,
             y_ref, sf_ref, state_ref, *, chunk: int, nc: int):
@@ -99,7 +101,7 @@ def ssd_pallas(x, dt, A, Bm, Cm, init_state=None, *, chunk: int = 128,
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm, init_state)

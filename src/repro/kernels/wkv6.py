@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
             o_ref, sf_ref, state_ref, *, chunk: int, nc: int):
@@ -85,7 +87,7 @@ def wkv6_pallas(r, k, v, w, u, init_state=None, *, chunk: int = 64,
             jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u, init_state)

@@ -132,7 +132,11 @@ def _trip_count(cond: _Computation) -> int:
 def _dot_flops(line: str, symbols: dict) -> float:
     """2 * out_elems * contraction_size from an HLO dot line.
 
-    Operands are bare %names; their shapes come from the symbol table."""
+    Depending on the XLA version, operands appear either as bare ``%names``
+    (shapes come from the symbol table) or with their shapes inlined
+    (``dot(f32[64,64]{1,0} %x, ...)``) — the first shape in the argument
+    list is then the lhs shape (a comma-split would cut inside ``[64,64]``).
+    """
     sm = _SHAPE_RE.search(line.split("=", 1)[1])
     if not sm:
         return 0.0
@@ -143,8 +147,12 @@ def _dot_flops(line: str, symbols: dict) -> float:
     args = re.search(r"dot\(([^)]*)\)", line)
     lhs_dims: list[int] = []
     if args:
-        first = args.group(1).split(",")[0].strip().lstrip("%")
-        lhs_dims = symbols.get(first, [])
+        inline = _SHAPE_RE.search(args.group(1))
+        if inline:
+            lhs_dims = [int(d) for d in inline.group(2).split(",") if d]
+        else:
+            first = args.group(1).split(",")[0].strip().lstrip("%")
+            lhs_dims = symbols.get(first, [])
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     contract = 1
     if m and lhs_dims:

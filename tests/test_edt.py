@@ -1,7 +1,11 @@
 """EDT task graphs + synchronization models (paper §2, §4, Table 2)."""
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:  # property tests skip; deterministic tests still run
+    from hypo_stub import HealthCheck, given, settings, st
 
 from repro.core.edt import (MODELS, TiledTaskGraph, run_graph_threaded,
                             run_model, synthesize, validate_order)

@@ -1,0 +1,65 @@
+"""Fast smoke checks of the benchmark entry points (< 1 minute total).
+
+These do not assert absolute timings (CI noise); they assert that every
+benchmark section runs end-to-end in smoke mode, emits its CSV rows, and
+that the taskgen benchmark's built-in backend-equality checks pass — plus
+one sanity bound: the compiled backend must not be slower than the Fraction
+reference on a real materialize.
+"""
+import time
+
+from repro.core.edt import TiledTaskGraph
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+
+def _collect(run_fn, **kw):
+    lines = []
+    run_fn(emit=lambda *a, **k: lines.append(str(a[0]) if a else ""), **kw)
+    return lines
+
+
+def test_bench_taskgen_smoke():
+    from benchmarks import bench_taskgen
+    lines = _collect(bench_taskgen.run, smoke=True)
+    # header + one row per smoke program + geomean line
+    assert len(lines) == 2 + len(bench_taskgen.SMOKE_SUITE)
+    assert lines[0].startswith("program,")
+    assert "geomean" in lines[-1]
+
+
+def test_bench_compile_smoke():
+    from benchmarks import bench_compile
+    lines = _collect(bench_compile.run, smoke=True)
+    assert len(lines) == 2 + len(bench_compile.SMOKE_SUITE)
+    assert "TIMEOUT" not in "\n".join(lines)
+
+
+def test_bench_sync_and_executor_smoke():
+    from benchmarks import bench_executor, bench_sync_overheads
+    rows = bench_sync_overheads.run(emit=lambda *a, **k: None, smoke=True)
+    assert rows  # one entry per (model, size)
+    out = bench_executor.run(emit=lambda *a, **k: None, smoke=True)
+    assert all(v > 0 for v in out.values())
+
+
+def test_run_harness_smoke_mode():
+    """`python -m benchmarks.run --smoke --only taskgen` exits cleanly."""
+    from benchmarks import run as harness
+    assert harness.main(["--smoke", "--only", "taskgen"]) == 0
+
+
+def test_compiled_not_slower_than_fraction():
+    """Loose perf floor: the whole point of the backend, cheaply verified."""
+    tilings = {"S": Tiling((2, 2, 2))}
+    params = {"T": 6, "N": 10}
+    gc = TiledTaskGraph(PROGRAMS["jacobi2d"](), tilings)
+    gf = TiledTaskGraph(PROGRAMS["jacobi2d"](), tilings, backend="fraction")
+    t0 = time.perf_counter()
+    mc = gc.materialize(params)
+    t_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    mf = gf.materialize(params)
+    t_f = time.perf_counter() - t0
+    assert mc.succ == mf.succ
+    assert t_c < t_f  # compiled wins by ~50x; < is a generous CI-safe bound

@@ -78,6 +78,7 @@ def test_compressed_allreduce_matches_mean():
     out = _run("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.parallel.compression import compressed_psum_grads
     mesh = jax.make_mesh((4,), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (4, 1024)) * 2.0
@@ -85,8 +86,8 @@ def test_compressed_allreduce_matches_mean():
     def region(gs):
         return compressed_psum_grads({"g": gs[0]}, mesh, axis="data")["g"]
 
-    out = jax.jit(jax.shard_map(region, mesh=mesh, in_specs=P("data", None),
-                                out_specs=P(None), check_vma=False))(g)
+    out = jax.jit(shard_map(region, mesh=mesh, in_specs=P("data", None),
+                            out_specs=P(None)))(g)
     want = g.mean(0)
     err = float(jnp.max(jnp.abs(out - want)))
     scale = float(jnp.max(jnp.abs(g))) / 127

@@ -12,11 +12,11 @@ Sources & methodology (see EXPERIMENTS.md §Roofline for the full discussion):
     but on TPU those live in VMEM (scan state, flash accumulators), so it
     overestimates HBM traffic by orders of magnitude for scanned models.
     The memory term therefore uses an explicit HBM-traffic model:
-        train:   3*W + 2*O + 3*A + 2*V      (weights fwd/bwd/update, opt r/w,
+        train:   3*W + 2*opt_mem + 3*A + 2*V      (weights fwd/bwd/update, opt r/w,
                                              carries save+2xread, logits w/r)
         prefill: W + 2*A + V + KV_write
         decode:  W + KV_read (+state)        (weights + full cache per token)
-    with W=param bytes/dev, O=opt bytes/dev, A=saved activation carries/dev,
+    with W=param bytes/dev, opt_mem=opt bytes/dev, A=saved activation carries/dev,
     V=logit bytes/dev, all under the recorded shardings.
   * MODEL_FLOPS = 2*N_active*tokens*(3 if train) + attention quadratic term
     (0.5 causal) — at 32k context attention dominates 6ND ~20x, so omitting
@@ -92,7 +92,7 @@ def hbm_traffic(rec: dict, cfg) -> float:
     n_dev = rec["n_devices"]
     W = cfg.n_params() * 2.0 / n_dev
     opt_b = rec.get("opt_bits", 32)
-    O = cfg.n_params() * (2.0 if opt_b == 8 else 8.0) / n_dev
+    opt_mem = cfg.n_params() * (2.0 if opt_b == 8 else 8.0) / n_dev
     S, B = _seq(shape), _batch(shape)
     A = cfg.n_layers * B * min(S, 2 ** 31) * cfg.d_model * 2.0 / n_dev
     V = B * (S if not shape.startswith(("decode", "long")) else 1) \
@@ -100,7 +100,7 @@ def hbm_traffic(rec: dict, cfg) -> float:
     kind = ("train" if shape.startswith("train") else
             "decode" if shape.startswith(("decode", "long")) else "prefill")
     if kind == "train":
-        return 3 * W + 2 * O + 3 * A + 2 * V
+        return 3 * W + 2 * opt_mem + 3 * A + 2 * V
     if kind == "prefill":
         kv_write = (rec.get("cache_bytes") or 0)
         return W + 2 * A / cfg.n_layers * 4 + V + kv_write

@@ -1,16 +1,29 @@
-"""Task-generation throughput: compiled vs Fraction scanning backend.
+"""Task-generation throughput across scanning backends.
 
 The paper's premise (§4, §5.1) is that task-graph *generation* — the
 get/put/count loops the compiler emits — must cost like generated C loop
 bounds, not like a polyhedral library call.  This benchmark measures exactly
-that layer: ``TiledTaskGraph.materialize`` (task creation + put loops),
-``pred_count`` sweeps (the counted/autodec master's §4.3 work), and ``roots``
-enumeration, under the compiled integer backend vs the retained Fraction
-reference path.  Graph equality is asserted, not assumed: the speedup only
-counts if task sets, edge lists, and pred counts are identical.
+that layer for every backend:
 
-Reported per program: tasks/sec and edges/sec (compiled), and the
-compiled-over-Fraction speedup per phase.
+* ``fraction`` — the retained rational reference path,
+* ``compiled`` — PR 1's generated integer loop nests (scalar points),
+* ``numpy``    — PR 2's vectorized batch enumeration (whole wavefronts as
+  index arrays).
+
+Per backend we time producing the graph in its **native representation**:
+``materialize()`` (dict-of-tuples adjacency) for the scalar backends and for
+the numpy compatibility view, plus ``index_graph()`` (flat index arrays —
+what the batched wavefront/executor layers consume) for numpy.  The §4.3
+counter sweep and root scan are timed per backend as well (per-task calls
+vs array blocks).
+
+Graph equality is asserted, not assumed: task lists, edge lists, pred
+counts, root sets, and the index-graph's labels/degrees must be identical
+across all backends or the run fails.
+
+Output: one CSV row per (program, backend) with a stable machine-readable
+schema — ``rows`` (list of dicts) and geomean summaries are also returned
+for the JSON artifact emitted by ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -38,12 +51,18 @@ SMOKE_SUITE = [
     ("trisolv", (2, 2), {"N": 32}),
 ]
 
+BACKENDS = ("fraction", "compiled", "numpy")
+
+CSV_FIELDS = ("program", "backend", "n_tasks", "n_edges", "materialize_ms",
+              "enum_ms", "predcount_ms", "roots_ms", "tasks_per_s",
+              "edges_per_s")
+
 
 def _time(fn, reps: int = 1):
     """Best-of-``reps`` wall time and the last result.
 
-    Both backends are always timed with the same rep count so warm-up or
-    scheduler noise cannot bias the reported speedup either way."""
+    Every backend is timed with the same rep count so warm-up or scheduler
+    noise cannot bias the reported speedups either way."""
     best = float("inf")
     out = None
     for _ in range(reps):
@@ -54,53 +73,114 @@ def _time(fn, reps: int = 1):
     return best, out
 
 
-def _check_identical(mc, mf) -> None:
-    assert mc.tasks == mf.tasks, "task sets differ between backends"
-    assert mc.succ == mf.succ, "edge lists differ between backends"
-    assert mc.pred_n == mf.pred_n, "pred counts differ between backends"
+def _check_identical(ma, mb) -> None:
+    assert ma.tasks == mb.tasks, "task sets differ between backends"
+    assert ma.succ == mb.succ, "edge lists differ between backends"
+    assert ma.pred_n == mb.pred_n, "pred counts differ between backends"
+
+
+def _geomean(xs):
+    g = 1.0
+    for x in xs:
+        g *= x
+    return g ** (1.0 / len(xs)) if xs else 0.0
+
+
+def _bench_one(name, tiles, params, reps):
+    """Rows for one program (one per backend), equality-verified."""
+    tilings = {"S": Tiling(tiles)}
+    graphs = {b: TiledTaskGraph(PROGRAMS[name](), tilings, backend=b)
+              for b in BACKENDS}
+    rows = {}
+    mats = {}
+    counts = {}
+    roots = {}
+    for b, g in graphs.items():
+        t_mat, m = _time(lambda: g.materialize(params), reps)
+        mats[b] = m
+        tasks = m.tasks
+        if b == "numpy":
+            # native product: the flat index-array graph
+            t_enum, ig = _time(lambda: g.index_graph(params), reps)
+            assert ig.n == len(tasks) and ig.n_edges == m.n_edges
+            assert ig.tasks == tasks, "index-graph labels differ"
+            assert ig.pred_n.tolist() == [m.pred_n[t] for t in tasks], \
+                "index-graph degrees differ"
+            stmts = list(g.program.statements)
+            arrs = g.tasks_arrays(params)
+            t_pc, pc = _time(
+                lambda: [c for s in stmts
+                         for c in g.pred_count_block(s, arrs[s], params)],
+                reps)
+            counts[b] = [int(c) for c in pc]
+        else:
+            t_enum = t_mat
+            t_pc, pc = _time(
+                lambda: [g.pred_count(t, params) for t in tasks], reps)
+            counts[b] = pc
+        t_roots, rt = _time(lambda: list(g.roots(params)), reps)
+        roots[b] = rt
+        n, e = len(tasks), m.n_edges
+        rows[b] = {
+            "program": name,
+            "backend": b,
+            "n_tasks": n,
+            "n_edges": e,
+            "materialize_ms": round(t_mat * 1e3, 3),
+            "enum_ms": round(t_enum * 1e3, 3),
+            "predcount_ms": round(t_pc * 1e3, 3),
+            "roots_ms": round(t_roots * 1e3, 3),
+            "tasks_per_s": round(n / max(t_enum, 1e-9)),
+            "edges_per_s": round(e / max(t_enum, 1e-9)),
+        }
+    for b in ("compiled", "numpy"):
+        _check_identical(mats["fraction"], mats[b])
+        assert counts["fraction"] == counts[b], \
+            f"pred counts differ (fraction vs {b})"
+        assert roots["fraction"] == roots[b], \
+            f"root sets differ (fraction vs {b})"
+    return [rows[b] for b in BACKENDS]
 
 
 def run(emit=print, smoke: bool = False):
     suite = SMOKE_SUITE if smoke else SUITE
     reps = 1 if smoke else 3
-    emit("program,n_tasks,n_edges,mat_compiled_ms,mat_fraction_ms,"
-         "mat_speedup,tasks_per_s,edges_per_s,predcount_speedup,roots_speedup")
-    speedups = []
+    emit(",".join(CSV_FIELDS))
+    rows = []
     for name, tiles, params in suite:
-        tilings = {"S": Tiling(tiles)}
-        gc = TiledTaskGraph(PROGRAMS[name](), tilings)
-        gf = TiledTaskGraph(PROGRAMS[name](), tilings, backend="fraction")
-
-        t_c, mc = _time(lambda: gc.materialize(params), reps)
-        t_f, mf = _time(lambda: gf.materialize(params), reps)
-        _check_identical(mc, mf)
-
-        # §4.3 counter sweep (what the counted/autodec master executes)
-        tasks = mc.tasks
-        t_pc_c, counts_c = _time(
-            lambda: [gc.pred_count(t, params) for t in tasks], reps)
-        t_pc_f, counts_f = _time(
-            lambda: [gf.pred_count(t, params) for t in tasks], reps)
-        assert counts_c == counts_f, "pred counts differ between backends"
-
-        t_r_c, roots_c = _time(lambda: list(gc.roots(params)), reps)
-        t_r_f, roots_f = _time(lambda: list(gf.roots(params)), reps)
-        assert roots_c == roots_f, "root sets differ between backends"
-
-        n, e = len(tasks), mc.n_edges
-        sp = t_f / max(t_c, 1e-9)
-        speedups.append(sp)
-        emit(f"{name},{n},{e},{t_c*1e3:.2f},{t_f*1e3:.2f},{sp:.1f},"
-             f"{n/max(t_c,1e-9):.0f},{e/max(t_c,1e-9):.0f},"
-             f"{t_pc_f/max(t_pc_c,1e-9):.1f},{t_r_f/max(t_r_c,1e-9):.1f}",
-             flush=True)
-    geo = 1.0
-    for s in speedups:
-        geo *= s
-    geo **= 1.0 / len(speedups)
-    emit(f"# geomean materialize speedup: {geo:.1f}x over {len(speedups)} "
-         f"programs (graphs verified identical)")
-    return speedups
+        prog_rows = _bench_one(name, tiles, params, reps)
+        rows.extend(prog_rows)
+        for r in prog_rows:
+            emit(",".join(str(r[f]) for f in CSV_FIELDS), flush=True)
+    by = {(r["program"], r["backend"]): r for r in rows}
+    progs = [s[0] for s in suite]
+    enum_sp = [by[p, "compiled"]["materialize_ms"]
+               / max(by[p, "numpy"]["enum_ms"], 1e-6) for p in progs]
+    mat_sp = [by[p, "compiled"]["materialize_ms"]
+              / max(by[p, "numpy"]["materialize_ms"], 1e-6) for p in progs]
+    frac_sp = [by[p, "fraction"]["materialize_ms"]
+               / max(by[p, "compiled"]["materialize_ms"], 1e-6) for p in progs]
+    pc_sp = [by[p, "compiled"]["predcount_ms"]
+             / max(by[p, "numpy"]["predcount_ms"], 1e-6) for p in progs]
+    roots_sp = [by[p, "compiled"]["roots_ms"]
+                / max(by[p, "numpy"]["roots_ms"], 1e-6) for p in progs]
+    geo = {
+        "numpy_enum_over_compiled": round(_geomean(enum_sp), 2),
+        "numpy_materialize_over_compiled": round(_geomean(mat_sp), 2),
+        "compiled_over_fraction": round(_geomean(frac_sp), 2),
+        "numpy_predcount_over_compiled": round(_geomean(pc_sp), 2),
+        "numpy_roots_over_compiled": round(_geomean(roots_sp), 2),
+    }
+    emit(f"# geomean enumeration speedup (numpy index arrays over compiled "
+         f"materialize): {geo['numpy_enum_over_compiled']:.1f}x over "
+         f"{len(progs)} programs (graphs verified identical)")
+    emit(f"# geomean dict-view materialize speedup (numpy over compiled): "
+         f"{geo['numpy_materialize_over_compiled']:.1f}x; compiled over "
+         f"fraction: {geo['compiled_over_fraction']:.1f}x")
+    emit(f"# geomean pred_count block speedup: "
+         f"{geo['numpy_predcount_over_compiled']:.1f}x; roots: "
+         f"{geo['numpy_roots_over_compiled']:.1f}x")
+    return {"schema_version": 1, "rows": rows, "geomean": geo}
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
 """Benchmark harness — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only SECTION] [--smoke]
+                                            [--json PATH]
 
 Sections:
   compile   — §5.1 Fig 6: compression vs projection dependence-compute time
-  taskgen   — task-generation throughput: compiled vs Fraction scanning
-              backend on materialize / pred_count / roots (graphs verified
-              identical)
+  taskgen   — task-generation throughput: fraction vs compiled vs numpy
+              scanning backends on materialize / index_graph / pred_count /
+              roots (graphs verified identical)
   sync      — §2 Table 2: overhead counters per synchronization model
   executor  — §5.2: makespan comparison across models (+ threaded autodec)
   roofline  — §Roofline terms from the dry-run artifacts (if present)
@@ -14,11 +15,22 @@ Sections:
 ``--smoke`` runs a fast subset of every section (small suites, no
 subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
+
+``--json PATH`` writes a machine-readable result file so CI can upload and
+diff perf artifacts across PRs.  Stable schema (version 1):
+
+    {"schema_version": 1, "smoke": bool,
+     "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
+
+where ``data`` is the section's own return value (e.g. taskgen emits
+``{"rows": [{"program", "backend", "tasks_per_s", ...}], "geomean": ...}``)
+when it is JSON-serializable, else its ``repr``.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 
@@ -30,6 +42,8 @@ def main(argv=None) -> int:
                              "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset of each section (sub-minute total)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
     args = ap.parse_args(argv)
 
     from . import (bench_compile, bench_executor, bench_roofline,
@@ -45,18 +59,33 @@ def main(argv=None) -> int:
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
+    report = {"schema_version": 1, "smoke": bool(args.smoke), "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)
         t0 = time.time()
         kw = {}
         if args.smoke and "smoke" in inspect.signature(fn).parameters:
             kw["smoke"] = True
+        ok, data = True, None
         try:
-            fn(**kw)
+            data = fn(**kw)
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"# section {name} failed: {e!r}")
+            ok = False
+            data = repr(e)
             rc = 1
-        print(f"# bench:{name} took {time.time()-t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        try:
+            json.dumps(data)
+        except (TypeError, ValueError):
+            data = repr(data)
+        report["sections"][name] = {"ok": ok, "seconds": round(dt, 3),
+                                    "data": data}
+        print(f"# bench:{name} took {dt:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
     return rc
 
 

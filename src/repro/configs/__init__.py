@@ -8,7 +8,6 @@ for the dry-run; ``applicable(cfg, shape)`` encodes the skip rules
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -3,18 +3,18 @@ from .executor import Counters, Gauge, Sim
 from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
                          run_counted, run_model, run_prescribed, run_tags1,
                          run_tags2, validate_order)
-from .taskgraph import (Dependence, MaterializedGraph, PolyhedralProgram,
-                        Statement, TaskId, TiledTaskGraph)
+from .taskgraph import (Dependence, IndexedGraph, MaterializedGraph,
+                        PolyhedralProgram, Statement, TaskId, TiledTaskGraph)
 from .threaded import ThreadedAutodec, run_graph_threaded
-from .wavefront import WavefrontSchedule, synthesize
+from .wavefront import WavefrontSchedule, simulate_schedule, synthesize
 
 __all__ = [
     "PolyhedralProgram", "Statement", "Dependence", "TiledTaskGraph",
-    "MaterializedGraph", "TaskId",
+    "MaterializedGraph", "IndexedGraph", "TaskId",
     "Sim", "Counters", "Gauge",
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",
     "run_autodec", "run_autodec_nosrc",
     "ThreadedAutodec", "run_graph_threaded",
-    "WavefrontSchedule", "synthesize",
+    "WavefrontSchedule", "synthesize", "simulate_schedule",
 ]

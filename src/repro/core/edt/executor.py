@@ -26,7 +26,7 @@ import heapq
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable
 
 
 class Gauge:
@@ -141,6 +141,16 @@ class Sim:
     # ---------------------------------------------------------------- tasks
     def make_ready(self, key, run_fn: Callable[[], None]) -> None:
         self.ready.append((key, run_fn))
+        self._dispatch()
+
+    def make_ready_batch(self, items) -> None:
+        """Enqueue a whole wavefront level in one call.
+
+        ``items`` is an iterable of ``(key, run_fn)`` pairs; the queue is
+        extended en bloc and dispatched once — level-sized batches from the
+        wavefront scheduler don't pay a dispatch attempt per task.
+        """
+        self.ready.extend(items)
         self._dispatch()
 
     def _dispatch(self) -> None:

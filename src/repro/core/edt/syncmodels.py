@@ -21,7 +21,7 @@ structure follows §4 exactly:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from .executor import Counters, Sim
@@ -115,7 +115,6 @@ def run_prescribed(graph: TiledTaskGraph, params: dict, workers: int = 4,
 
 def _wrap_starts(sim: Sim, start_of: dict[TaskId, Callable]) -> None:
     """Run per-task start side effects at dispatch time (GC-at-start etc.)."""
-    orig = sim._dispatch
 
     def dispatch():
         if not sim.gate_open:

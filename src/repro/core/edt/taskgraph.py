@@ -23,15 +23,26 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Iterator, Optional, Sequence
+from typing import Iterator, Optional
+
+import numpy as np
 
 from ..poly import (CountingFunction, LoopNest, Polyhedron, Tiling,
                     make_counting_function, project_onto, tile_dependence,
                     tile_domain)
-from ..poly.counting import dims_to_params
 from ..poly.scanning import _row_ints
 
 TaskId = tuple[str, tuple[int, ...]]  # (statement name, tile coords)
+
+
+def _task_ids(name: str, arr: "np.ndarray") -> list[TaskId]:
+    """(name, coords) TaskId tuples for a coord block — C-level zips only."""
+    n, d = arr.shape
+    if d and n:
+        tuples = list(zip(*(arr[:, j].tolist() for j in range(d))))
+    else:
+        tuples = [()] * n
+    return list(zip(itertools.repeat(name), tuples))
 
 
 def _int_rows(poly: Polyhedron) -> tuple[tuple, tuple]:
@@ -106,6 +117,9 @@ class _TiledDep:
     # delta_t constraint rows as plain ints (fast self-pair containment)
     int_ineqs: tuple = ()
     int_eqs: tuple = ()
+    # lazy joint nest over (src dims, tgt dims): one vectorized scan of this
+    # polyhedron yields every edge of the dependence (numpy backend)
+    joint_nest: Optional[LoopNest] = None
 
 
 class TiledTaskGraph:
@@ -113,11 +127,22 @@ class TiledTaskGraph:
 
     ``backend`` selects the scanning evaluation path for every generated
     loop (tile nests, get/put loops, counters): ``compiled`` (default,
-    integer codegen) or ``fraction`` (the retained reference path) — see
+    integer codegen), ``numpy`` (vectorized batch enumeration) or
+    ``fraction`` (the retained reference path) — see
     :mod:`repro.core.poly.scanning`.  Per-``params`` scan state (compiled
     loop bodies, root projections, containment rows) is computed once and
     shared across all tasks, so ``materialize``/``roots``/``pred_count``
     amortize instead of re-deriving per task.
+
+    With ``backend="numpy"`` the batch layer replaces per-task dispatch
+    entirely: tile domains are enumerated as ``(N, ndim)`` index arrays,
+    every dependence's edges come from **one** vectorized scan of its joint
+    ``Δ_T`` polyhedron (src dims × tgt dims — lexicographic order groups
+    the put loops by source task for free), predecessor counts evaluate as
+    matrix products over tile blocks, and ``roots``/``materialize``/
+    ``index_graph`` consume whole statements per call.  Results are
+    byte-identical to the scalar backends (asserted by the equivalence
+    suite and the taskgen benchmark).
     """
 
     def __init__(self, program: PolyhedralProgram,
@@ -262,8 +287,13 @@ class TiledTaskGraph:
     def roots(self, params: dict[str, int]) -> Iterator[TaskId]:
         """Tasks with no predecessors (the master's scan, made O(1)-startup by
         preschedule in the autodec model)."""
-        self.roots_polyhedra()
         pv = self._pv(params)
+        if self.backend == "numpy":
+            return self._roots_numpy(pv)
+        return self._roots_scalar(pv)
+
+    def _roots_scalar(self, pv: list[int]) -> Iterator[TaskId]:
+        self.roots_polyhedra()
         tail = tuple(pv) + (1,)
         for name in self.program.statements:
             rows = self._roots_rows[name]
@@ -277,6 +307,187 @@ class TiledTaskGraph:
                 else:
                     yield (name, t)
 
+    def _roots_numpy(self, pv: list[int]) -> Iterator[TaskId]:
+        """Whole-statement root scan: one pred-count block per statement."""
+        for name in self.program.statements:
+            tiles = self.tile_nests[name].iterate_array(pv)
+            counts = self._pred_counts_array(name, tiles, pv)
+            rows = tiles.tolist()
+            for i in np.flatnonzero(counts == 0).tolist():
+                yield (name, tuple(rows[i]))
+
+    # ------------------------------------------------------ batched (numpy)
+    def tasks_arrays(self, params: dict[str, int]) -> dict[str, "np.ndarray"]:
+        """Per-statement tile coordinates as ``(N, ndim)`` int64 arrays."""
+        pv = self._pv(params)
+        return {name: self.tile_nests[name].iterate_array(pv)
+                for name in self.program.statements}
+
+    def pred_count_block(self, name: str, tiles,
+                         params: dict[str, int]) -> "np.ndarray":
+        """§4.3 predecessor counts for a whole block of target tiles.
+
+        Equals ``[pred_count((name, t), params) for t in tiles]`` but the
+        enumerator-form counters evaluate as array arithmetic over the
+        block, and the self-pair exclusion is one containment mask.
+        """
+        return self._pred_counts_array(
+            name, np.asarray(tiles, dtype=np.int64), self._pv(params))
+
+    def _pred_counts_array(self, name: str, tiles: "np.ndarray",
+                           pv: list[int]) -> "np.ndarray":
+        total = np.zeros(tiles.shape[0], dtype=np.int64)
+        for td in self._in[name]:
+            total += td.pred_fn.count_block(tiles, pv)
+            if td.dep.src == td.dep.tgt:
+                total -= self._self_pair_mask(td, tiles, pv)
+        return total
+
+    def _self_pair_mask(self, td: _TiledDep, tiles: "np.ndarray",
+                        pv: list[int]) -> "np.ndarray":
+        """1 where the tile-level self pair (T, T) lies in Δ_T, else 0."""
+        n, ns = tiles.shape
+        mask = np.ones(n, dtype=bool)
+        for rows, eq in ((td.int_ineqs, False), (td.int_eqs, True)):
+            for r in rows:
+                coeff = np.asarray(
+                    [r[j] + r[ns + j] for j in range(ns)], dtype=np.int64)
+                c = r[-1] + sum(a * p for a, p in zip(r[2 * ns:-1], pv))
+                v = tiles @ coeff + c
+                mask &= (v == 0) if eq else (v >= 0)
+        return mask.astype(np.int64)
+
+    def _joint_nest(self, td: _TiledDep) -> LoopNest:
+        """Lazy loop nest over the joint (src, tgt) dependence polyhedron."""
+        if td.joint_nest is None:
+            td.joint_nest = LoopNest(td.delta_t)
+        return td.joint_nest
+
+    def _stmt_index(self, pv: list[int], with_tasks: bool = True) -> dict:
+        """Per statement: coord array, ravel-key index, optional TaskIds.
+
+        Tile coordinates are encoded into mixed-radix keys over the
+        statement's bounding box; lexicographic task order makes the keys
+        sorted, so edge endpoints map to task indices via searchsorted —
+        no per-task hashing anywhere in the batch paths.  TaskId tuples
+        (the scalar-world labels) are only built when asked for: the pure
+        array paths (``index_graph``) never pay the per-task tuple cost.
+        """
+        info = {}
+        for name in self.program.statements:
+            arr = self.tile_nests[name].iterate_array(pv)
+            ts = _task_ids(name, arr) if with_tasks else None
+            n, d = arr.shape
+            if n and d:
+                mins = arr.min(axis=0)
+                extents = arr.max(axis=0) - mins + 1
+                strides = np.ones(d, dtype=np.int64)
+                for j in range(d - 2, -1, -1):
+                    strides[j] = strides[j + 1] * extents[j + 1]
+                keys = (arr - mins) @ strides
+            else:
+                mins = np.zeros(d, dtype=np.int64)
+                strides = np.zeros(d, dtype=np.int64)
+                keys = np.zeros(n, dtype=np.int64)
+            info[name] = (ts, keys, mins, strides, arr)
+        return info
+
+    def _dep_edges(self, td: _TiledDep, pv: list[int]) -> "np.ndarray":
+        """All (src tile, tgt tile) edge rows of one dependence, self pairs
+        excluded — a single vectorized scan of the joint polyhedron."""
+        edges = self._joint_nest(td).iterate_array(pv)
+        ns = self.tilings[td.dep.src].ndim
+        if td.dep.src == td.dep.tgt and edges.shape[0]:
+            keep = (edges[:, :ns] != edges[:, ns:]).any(axis=1)
+            edges = edges[keep]
+        return edges
+
+    def _materialize_numpy(self, pv: list[int]) -> "MaterializedGraph":
+        info = self._stmt_index(pv)
+        tasks: list[TaskId] = []
+        succ: dict[TaskId, list[TaskId]] = {}
+        stmt_succ: dict[str, list[list[TaskId]]] = {}
+        pred_counts: dict[str, np.ndarray] = {}
+        for name in self.program.statements:
+            ts = info[name][0]
+            tasks.extend(ts)
+            lists: list[list[TaskId]] = [[] for _ in ts]
+            stmt_succ[name] = lists
+            succ.update(zip(ts, lists))
+            pred_counts[name] = np.zeros(len(ts), dtype=np.int64)
+        for name in self.program.statements:
+            for td in self._out[name]:
+                tgt_name = td.dep.tgt
+                edges = self._dep_edges(td, pv)
+                ne = edges.shape[0]
+                if not ne:
+                    continue
+                ns = self.tilings[name].ndim
+                src, tgt = edges[:, :ns], edges[:, ns:]
+                _, keys_s, mins_s, strides_s, _ = info[name]
+                ts_t, keys_t, mins_t, strides_t, _ = info[tgt_name]
+                tgt_idx = np.searchsorted(keys_t, (tgt - mins_t) @ strides_t)
+                pred_counts[tgt_name] += np.bincount(
+                    tgt_idx, minlength=len(ts_t))
+                src_idx = np.searchsorted(keys_s, (src - mins_s) @ strides_s)
+                tg = _task_ids(tgt_name, tgt)
+                # edges are lex-sorted by source: group bounds are where the
+                # source index changes, then one list-extend per source task
+                starts = np.flatnonzero(
+                    np.r_[True, src_idx[1:] != src_idx[:-1]])
+                bounds = np.append(starts, ne).tolist()
+                owners = src_idx[starts].tolist()
+                lists = stmt_succ[name]
+                for gi, u in enumerate(owners):
+                    lists[u].extend(tg[bounds[gi]:bounds[gi + 1]])
+        pred_n: dict[TaskId, int] = {}
+        for name in self.program.statements:
+            pred_n.update(zip(info[name][0], pred_counts[name].tolist()))
+        return MaterializedGraph(tasks, succ, pred_n)
+
+    def index_graph(self, params: dict[str, int]) -> "IndexedGraph":
+        """The whole task graph as flat index arrays (no per-task tuples).
+
+        The numpy backend's native graph product: tasks are global integer
+        ids (statement blocks concatenated in program order, lex order
+        within — same total order as ``materialize().tasks``), edges are
+        two parallel int arrays, and ``pred_n`` is their bincount.  Pure
+        array output: TaskId labels are derived lazily on access, so
+        generation itself never touches per-task Python objects.
+        """
+        pv = self._pv(params)
+        info = self._stmt_index(pv, with_tasks=False)
+        base: dict[str, int] = {}
+        blocks: list[tuple[str, np.ndarray]] = []
+        n = 0
+        for name in self.program.statements:
+            base[name] = n
+            arr = info[name][4]
+            n += arr.shape[0]
+            blocks.append((name, arr))
+        srcs, tgts = [], []
+        for name in self.program.statements:
+            for td in self._out[name]:
+                edges = self._dep_edges(td, pv)
+                if not edges.shape[0]:
+                    continue
+                tgt_name = td.dep.tgt
+                ns = self.tilings[name].ndim
+                _, keys_s, mins_s, strides_s, _ = info[name]
+                _, keys_t, mins_t, strides_t, _ = info[tgt_name]
+                src_idx = np.searchsorted(
+                    keys_s, (edges[:, :ns] - mins_s) @ strides_s)
+                tgt_idx = np.searchsorted(
+                    keys_t, (edges[:, ns:] - mins_t) @ strides_t)
+                srcs.append(src_idx + base[name])
+                tgts.append(tgt_idx + base[tgt_name])
+        z = np.zeros(0, dtype=np.int64)
+        edge_src = np.concatenate(srcs) if srcs else z
+        edge_tgt = np.concatenate(tgts) if tgts else z
+        return IndexedGraph(
+            stmt_blocks=blocks, n=n, edge_src=edge_src, edge_tgt=edge_tgt,
+            pred_n=np.bincount(edge_tgt, minlength=n))
+
     # ------------------------------------------------------------ materialize
     def materialize(self, params: dict[str, int]) -> "MaterializedGraph":
         """Explicit adjacency (for tests / the prescribed model / wavefronts).
@@ -286,9 +497,13 @@ class TiledTaskGraph:
         loops stream over all tasks of a statement — instead of re-entering
         ``successors`` (and re-binding scan state) per task.  The resulting
         task list, per-task successor order, and pred counts are identical
-        to the per-task path.
+        to the per-task path.  The ``numpy`` backend goes further: each
+        dependence's edge list is one vectorized scan of the joint Δ_T
+        polyhedron (see ``_materialize_numpy``).
         """
         pv = self._pv(params)
+        if self.backend == "numpy":
+            return self._materialize_numpy(pv)
         tasks: list[TaskId] = []
         by_stmt: dict[str, list[TaskId]] = {}
         for name in self.program.statements:
@@ -315,6 +530,37 @@ class TiledTaskGraph:
 
     def _pv(self, params: dict[str, int]) -> list[int]:
         return [params[n] for n in self.param_names]
+
+
+@dataclass
+class IndexedGraph:
+    """Flat-array task graph: global task ids + parallel edge arrays.
+
+    ``tasks`` (TaskId labels) is derived lazily — consumers that stay in
+    index space (wavefront leveling, batch executors) never build it.
+    """
+    stmt_blocks: list[tuple[str, "np.ndarray"]]  # (statement, (N, d) coords)
+    n: int
+    # int64 global task indices; sorted by source only WITHIN each
+    # dependence's block (blocks are concatenated per statement × dep) —
+    # CSR consumers must sort/argsort globally first.
+    edge_src: "np.ndarray"
+    edge_tgt: "np.ndarray"
+    pred_n: "np.ndarray"    # int64 in-degrees, indexed by global task id
+    _tasks: Optional[list[TaskId]] = None
+
+    @property
+    def tasks(self) -> list[TaskId]:
+        if self._tasks is None:
+            out: list[TaskId] = []
+            for name, arr in self.stmt_blocks:
+                out.extend(_task_ids(name, arr))
+            self._tasks = out
+        return self._tasks
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_src.shape[0])
 
 
 @dataclass

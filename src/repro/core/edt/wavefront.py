@@ -11,13 +11,23 @@ because the dependence relation was exact at compile time.
 For uniform dependences (constant distance vectors — pipelines, stencils) the
 wavefront index also has a closed affine form; we derive it when possible so
 huge tile spaces never need materializing.
+
+With ``backend="numpy"`` graphs, :func:`synthesize` levels the graph from
+flat index arrays (:meth:`TiledTaskGraph.index_graph`): a CSR Kahn sweep
+where each wavefront's out-edges are gathered, decremented, and
+max-propagated as whole arrays — no per-task Python dispatch.  The executor
+consumes the resulting levels as batches (:func:`simulate_schedule` /
+``Sim.make_ready_batch``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from fractions import Fraction
-from typing import Optional, Sequence
+from typing import Optional
 
+import numpy as np
+
+from .executor import Sim
 from .taskgraph import TaskId, TiledTaskGraph
 
 
@@ -32,16 +42,23 @@ class WavefrontSchedule:
 
     @property
     def max_width(self) -> int:
-        return max((len(l) for l in self.levels), default=0)
+        return max((len(lv) for lv in self.levels), default=0)
 
     def stats(self) -> dict:
-        n = sum(len(l) for l in self.levels)
+        n = sum(len(lv) for lv in self.levels)
         return {"tasks": n, "depth": self.depth, "max_width": self.max_width,
                 "avg_width": n / max(1, self.depth)}
 
 
 def synthesize(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
-    """Longest-path leveling of the materialized tile graph."""
+    """Longest-path leveling of the tile graph.
+
+    ``numpy``-backend graphs level from flat index arrays (whole wavefronts
+    per step); the scalar path materializes and walks the dict graph.  Both
+    produce identical schedules.
+    """
+    if graph.backend == "numpy":
+        return _synthesize_arrays(graph, params)
     g = graph.materialize(params)
     indeg = dict(g.pred_n)
     level = {t: 0 for t in g.tasks}
@@ -62,10 +79,87 @@ def synthesize(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
     assert placed == len(g.tasks), "cycle in task graph"
     # re-bucket by longest-path level (Kahn order may under-level)
     buckets: dict[int, list[TaskId]] = {}
-    for t, l in level.items():
-        buckets.setdefault(l, []).append(t)
-    levels = [sorted(buckets[l]) for l in sorted(buckets)]
+    for t, lv in level.items():
+        buckets.setdefault(lv, []).append(t)
+    levels = [sorted(buckets[lv]) for lv in sorted(buckets)]
     return WavefrontSchedule(levels, level)
+
+
+def _synthesize_arrays(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
+    """Vectorized Kahn + longest-path over flat edge arrays.
+
+    Each iteration retires one wavefront: the frontier's out-edges are
+    gathered through a CSR index (ragged arange via repeat/cumsum), target
+    levels max-propagate with ``np.maximum.at``, and in-degrees fall by
+    per-target counts (``np.unique``).  The next frontier comes from the
+    decremented targets only — O(V + E log E) total, never a full-array
+    rescan per level.
+    """
+    ig = graph.index_graph(params)
+    n = ig.n
+    order = np.argsort(ig.edge_src, kind="stable")
+    es = ig.edge_src[order]
+    et = ig.edge_tgt[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(es, minlength=n), out=indptr[1:])
+    indeg = ig.pred_n.copy()
+    level = np.zeros(n, dtype=np.int64)
+    frontier = np.flatnonzero(indeg == 0)
+    done = 0
+    while frontier.size:
+        done += frontier.size
+        starts = indptr[frontier]
+        counts = indptr[frontier + 1] - starts
+        tot = int(counts.sum())
+        if not tot:
+            break
+        csum = np.cumsum(counts)
+        eidx = np.repeat(starts - (csum - counts), counts) \
+            + np.arange(tot, dtype=np.int64)
+        tg = et[eidx]
+        np.maximum.at(level, tg, np.repeat(level[frontier] + 1, counts))
+        touched, dec = np.unique(tg, return_counts=True)
+        indeg[touched] -= dec
+        # a task enters the frontier exactly when its last get is satisfied
+        frontier = touched[indeg[touched] == 0]
+    assert done == n, "cycle in task graph"
+    lv = level.tolist()
+    level_of = dict(zip(ig.tasks, lv))
+    buckets: dict[int, list[TaskId]] = {}
+    for t, l_ in zip(ig.tasks, lv):
+        buckets.setdefault(l_, []).append(t)
+    levels = [sorted(buckets[l_]) for l_ in sorted(buckets)]
+    return WavefrontSchedule(levels, level_of)
+
+
+def simulate_schedule(schedule: WavefrontSchedule, workers: int = 4,
+                      task_dur: float = 1.0) -> Sim:
+    """Execute a static wavefront schedule on the Sim, level by level.
+
+    Each level is handed to the executor as ONE batch
+    (:meth:`Sim.make_ready_batch`) — the on-device lowering where a whole
+    wavefront launches together and the only sync is the level barrier.
+    Returns the finished Sim (``exec_order``, ``counters.makespan``).
+    """
+    sim = Sim(workers, task_dur, setup_cost=0.0)
+
+    def launch(i: int) -> None:
+        if i >= len(schedule.levels):
+            return
+        lvl = schedule.levels[i]
+        remaining = len(lvl)
+
+        def done() -> None:
+            nonlocal remaining
+            remaining -= 1
+            if remaining == 0:
+                launch(i + 1)
+
+        sim.make_ready_batch((t, done) for t in lvl)
+
+    launch(0)
+    sim.run()
+    return sim
 
 
 def uniform_distance_vectors(graph: TiledTaskGraph) -> Optional[list[tuple]]:
@@ -103,7 +197,6 @@ def closed_form_level(graph: TiledTaskGraph) -> Optional[callable]:
     ds = uniform_distance_vectors(graph)
     if ds is None or not ds:
         return None
-    ndim = len(ds[0])
     # weights: smallest positive integer combination covering all distances;
     # use w_i = 1 when all distances are >= 0 and each has sum >= 1.
     if all(all(c >= 0 for c in d) and sum(d) >= 1 for d in ds):

@@ -12,11 +12,11 @@ baseline it is benchmarked against.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from fractions import Fraction
 from typing import Iterable, Optional, Sequence
 
-from .linalg import (Frac, Mat, Row, frac, is_zero_row, mat_inv, mat_vec,
+from .linalg import (Mat, Row, frac, is_zero_row, mat_inv, mat_vec,
                      row_normalize, vec, vec_mat)
 from .lp import lp_feasible, lp_max, lp_min
 
@@ -73,13 +73,13 @@ class Polyhedron:
         """Axis-aligned box lo_i <= x_i <= hi_i (bounds are rationals)."""
         n, npar = len(dim_names), len(param_names)
         rows = []
-        for i, (l, h) in enumerate(zip(lo, hi)):
+        for i, (lb, ub) in enumerate(zip(lo, hi)):
             lo_row = [F0] * (n + npar + 1)
             lo_row[i] = F1
-            lo_row[-1] = -frac(l)
+            lo_row[-1] = -frac(lb)
             hi_row = [F0] * (n + npar + 1)
             hi_row[i] = -F1
-            hi_row[-1] = frac(h)
+            hi_row[-1] = frac(ub)
             rows += [tuple(lo_row), tuple(hi_row)]
         return Polyhedron(tuple(dim_names), tuple(param_names), tuple(rows))
 
@@ -236,7 +236,6 @@ class Polyhedron:
 
         M is ndim x len(new_dim_names); t length ndim. Parameters are untouched.
         """
-        nnew = len(new_dim_names)
 
         def conv(row: Row) -> Row:
             a = row[:self.ndim]

@@ -91,7 +91,6 @@ def project_out(poly: Polyhedron, dims: Sequence[int],
     """
     dims = sorted(set(dims))
     keep = [i for i in range(poly.ndim) if i not in dims]
-    ncol = poly.ncol
 
     eqs = [tuple(r) for r in poly.eqs]
     ineqs = [tuple(r) for r in poly.ineqs]
@@ -128,7 +127,6 @@ def project_out(poly: Polyhedron, dims: Sequence[int],
         ineqs = eliminate_dim(ineqs, d)
         if simplify == "lp" or (simplify == "auto" and len(ineqs) > lp_threshold):
             nv = poly.ndim + poly.nparam
-            full = ineqs + [e for e in eqs] + [tuple(-c for c in e) for e in eqs]
             # prune only the inequality part against the full system
             ineqs = _lp_prune(ineqs, nv)
 

@@ -7,7 +7,7 @@ Fourier-Motzkin projection of the polyhedron onto the outer dims, so that at
 "run time" (task execution) each level's bounds are cheap affine min/max
 evaluations — exactly like generated C loop bounds.
 
-Two evaluation backends share the same per-level systems:
+Three evaluation backends share the same per-level systems:
 
 * ``compiled`` (default) — the projected bounds are normalized once, at
   construction, into integer ``ceild``/``floord`` form (``-(rest // a)`` /
@@ -16,11 +16,25 @@ Two evaluation backends share the same per-level systems:
   source* — an actual loop nest compiled per polyhedron, with parameter-only
   bounds hoisted out of the loops — so scanning behaves like the paper's
   generated C loops: pure integer arithmetic, no per-point allocation.
+* ``numpy`` — batch enumeration: :meth:`LoopNest.iterate_array` /
+  :meth:`LoopNest.count_vectorized` run *generated NumPy source* that emits
+  whole wavefronts of points at once (``arange`` per level, ceil/floor
+  division applied as array ops, ragged levels expanded with the
+  repeat/cumsum trick) and returns a raveled ``(N, ndim)`` int64 array in
+  the same lexicographic order the scalar loops produce.  The per-point
+  scalar APIs (``iterate``/``count``) delegate to the compiled integer
+  path.  Both reuse the same ``_IntRow`` normalization.
 * ``fraction`` — the original per-call ``fractions.Fraction`` evaluation,
   retained as the reference oracle for the equivalence regression tests.
 
+Compiled scan/count functions (scalar and NumPy) are cached in a module
+table keyed by the **canonical polyhedron**, so identical dependence
+polyhedra across graphs share one codegen (see :func:`scan_cache_info`).
+
 Scanning is exact over the integers: level-k bounds come from the rational
 projection, and integer-empty inner ranges simply produce empty loops.
+Array enumeration uses int64; coefficients/params that overflow int64 are
+out of scope (the scalar paths stay exact at arbitrary precision).
 """
 from __future__ import annotations
 
@@ -29,12 +43,44 @@ from dataclasses import dataclass
 from fractions import Fraction
 from typing import Iterator, Optional, Sequence
 
+import numpy as np
+
 from .polyhedron import Polyhedron
 from .projection import project_out
 
 F0 = Fraction(0)
 
-BACKENDS = ("compiled", "fraction")
+BACKENDS = ("compiled", "numpy", "fraction")
+
+# --------------------------------------------------------------------------
+# Compiled-scan cache: canonical polyhedron -> compiled artifacts.  Two
+# LoopNests over equal canonical polyhedra (e.g. the same dependence in two
+# graphs) share one generated scan/count function per flavor.
+_SCAN_CACHE: dict[tuple, dict] = {}
+_SCAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def scan_cache_info() -> dict:
+    """Hit/miss counters and size of the compiled-scan cache."""
+    return {**_SCAN_CACHE_STATS, "size": len(_SCAN_CACHE)}
+
+
+def clear_scan_cache() -> None:
+    _SCAN_CACHE.clear()
+    _SCAN_CACHE_STATS["hits"] = 0
+    _SCAN_CACHE_STATS["misses"] = 0
+
+
+def _cache_slot(key: tuple, flavor: str, build):
+    """Fetch or build the compiled artifacts for one codegen flavor."""
+    entry = _SCAN_CACHE.setdefault(key, {})
+    got = entry.get(flavor)
+    if got is not None:
+        _SCAN_CACHE_STATS["hits"] += 1
+        return got
+    _SCAN_CACHE_STATS["misses"] += 1
+    entry[flavor] = got = build()
+    return got
 
 
 def _row_ints(row) -> tuple[int, ...]:
@@ -153,6 +199,12 @@ class LoopNest:
         self._scan_fn = None   # generated lazily (codegen is not free)
         self._count_fn = None
         self._gen_source: Optional[str] = None
+        self._scan_np_fn = None
+        self._count_np_fn = None
+        self._np_source: Optional[str] = None
+        # canonical-polyhedron cache key: rows are tuples of Fractions.
+        self._cache_key = (self.poly.dim_names, self.poly.param_names,
+                           self.poly.ineqs, self.poly.eqs)
 
     def feasible(self, params) -> bool:
         """Evaluate the pure-parameter guards (integer arithmetic)."""
@@ -335,12 +387,14 @@ class LoopNest:
         return "\n".join(body("scan") + [""] + body("count")) + "\n"
 
     def _compile_fns(self) -> None:
-        self._gen_source = self._emit()
-        ns: dict = {}
-        exec(compile(self._gen_source, f"<loopnest {self.poly.dim_names}>",
-                     "exec"), ns)
-        self._scan_fn = ns["__scan"]
-        self._count_fn = ns["__count"]
+        def build():
+            src = self._emit()
+            ns: dict = {}
+            exec(compile(src, f"<loopnest {self.poly.dim_names}>", "exec"), ns)
+            return (src, ns["__scan"], ns["__count"])
+
+        self._gen_source, self._scan_fn, self._count_fn = \
+            _cache_slot(self._cache_key, "scalar", build)
 
     def generated_source(self) -> str:
         """The generated Python loop nest (compiled backend; docs/debug)."""
@@ -348,17 +402,202 @@ class LoopNest:
             self._compile_fns()
         return self._gen_source or ""
 
+    # ------------------------------------------------------- codegen (numpy)
+    def _emit_numpy(self) -> str:
+        """Generate NumPy source for batch scan and count.
+
+        The same ``_IntRow`` bounds drive array arithmetic: each level either
+        has parameter-only (static) bounds — expanded with ``repeat``/``tile``
+        like a meshgrid axis — or outer-dim-dependent (ragged) bounds, where
+        per-prefix extents are clipped and expanded with the repeat/cumsum
+        trick.  The scan returns a raveled ``(N, ndim)`` int64 array in exact
+        lexicographic order; the count closes the innermost level in form.
+        """
+        n = self.ndim
+        head = [f"    p{j} = pv[{j}]" for j in range(self.nparam)]
+        guard_cond = None
+        if self._infeasible:
+            guard_cond = "True"
+        elif self._int_guards:
+            conds = []
+            for par, const in self._int_guards:
+                r = _IntRow(1, (), par, const)
+                conds.append(f"({self._rest_src(r)}) < 0")
+            guard_cond = " or ".join(conds)
+
+        # per-level bound sources; static (parameter-only) rows hoisted
+        hoist: list[str] = []
+        lb_src: list[Optional[str]] = []
+        ub_src: list[Optional[str]] = []
+        lb_static: list[bool] = []
+        dynamic: list[bool] = []
+
+        def fold(fn: str, parts: list[str]) -> str:
+            out = parts[0]
+            for p in parts[1:]:
+                out = f"_np.{fn}({out}, {p})"
+            return out
+
+        for k in range(n):
+            los, ups = self._int_levels[k]
+            stat_l = [self._bound_src(r, True) for r in los if not r.pre]
+            dyn_l = [self._bound_src(r, True) for r in los if r.pre]
+            stat_u = [self._bound_src(r, False) for r in ups if not r.pre]
+            dyn_u = [self._bound_src(r, False) for r in ups if r.pre]
+            if stat_l:
+                src = stat_l[0] if len(stat_l) == 1 else "max(%s)" % ", ".join(stat_l)
+                hoist.append(f"    slb{k} = {src}")
+            if stat_u:
+                src = stat_u[0] if len(stat_u) == 1 else "min(%s)" % ", ".join(stat_u)
+                hoist.append(f"    sub{k} = {src}")
+            if not (stat_l or dyn_l) or not (stat_u or dyn_u):
+                lb_src.append(None)
+                ub_src.append(None)
+                lb_static.append(True)
+                dynamic.append(False)
+                continue
+            l_parts = ([f"slb{k}"] if stat_l else []) + dyn_l
+            u_parts = ([f"sub{k}"] if stat_u else []) + dyn_u
+            lb_src.append(fold("maximum", l_parts))
+            ub_src.append(fold("minimum", u_parts))
+            lb_static.append(not dyn_l)
+            dynamic.append(bool(dyn_l or dyn_u))
+
+        def body(kind: str) -> list[str]:
+            out = [f"def __{kind}_np(pv):"]
+            out += head
+            empty = f"_np.empty((0, {n}), dtype=_np.int64)"
+            ret_nothing = f"return {empty}" if kind == "scan" else "return 0"
+            if guard_cond:
+                out.append(f"    if {guard_cond}:")
+                out.append(f"        {ret_nothing}")
+            out += hoist
+            # which outer-dim columns each level must carry forward: the scan
+            # needs every dim; the count only dims referenced by deeper bounds
+            if kind == "scan":
+                carry_after = [set(range(k + 1)) for k in range(n)]
+            else:
+                carry_after = []
+                for k in range(n):
+                    need: set[int] = set()
+                    for k2 in range(k + 1, n):
+                        los2, ups2 = self._int_levels[k2]
+                        for r in los2 + ups2:
+                            need |= {j for j, _ in r.pre}
+                    carry_after.append({j for j in need if j <= k})
+            out.append("    m = 1")
+            last = n - 1
+            for k in range(n):
+                if lb_src[k] is None or ub_src[k] is None:
+                    nm = self.poly.dim_names[k]
+                    out.append(f"    raise ValueError("
+                               f"\"dim {k} ({nm}) is unbounded\")")
+                    return out
+                carry = sorted(carry_after[k])
+                if not dynamic[k]:
+                    out.append(f"    lb{k} = {lb_src[k]}")
+                    out.append(f"    ub{k} = {ub_src[k]}")
+                    if kind == "count" and k == last:
+                        out.append(f"    return m * (ub{k} - lb{k} + 1) "
+                                   f"if ub{k} >= lb{k} else 0")
+                        return out
+                    out.append(f"    n{k} = ub{k} - lb{k} + 1")
+                    out.append(f"    if n{k} <= 0:")
+                    out.append(f"        {ret_nothing}")
+                    for j in carry:
+                        if j < k:
+                            out.append(f"    d{j} = _np.repeat(d{j}, n{k})")
+                    if k in carry:
+                        out.append(f"    d{k} = _np.tile(_np.arange(lb{k}, "
+                                   f"ub{k} + 1, dtype=_np.int64), m)")
+                    out.append(f"    m = m * n{k}")
+                else:
+                    out.append(f"    lb{k} = {lb_src[k]}")
+                    out.append(f"    ub{k} = {ub_src[k]}")
+                    out.append(f"    cnt{k} = _np.maximum(ub{k} - lb{k} + 1, 0)")
+                    if kind == "count" and k == last:
+                        out.append(f"    return int(cnt{k}.sum())")
+                        return out
+                    out.append(f"    csum{k} = _np.cumsum(cnt{k})")
+                    out.append(f"    t{k} = int(csum{k}[-1]) if m else 0")
+                    out.append(f"    if t{k} == 0:")
+                    out.append(f"        {ret_nothing}")
+                    if carry:
+                        out.append(f"    idx{k} = _np.repeat(_np.arange(m), cnt{k})")
+                        for j in carry:
+                            if j < k:
+                                out.append(f"    d{j} = d{j}[idx{k}]")
+                        if k in carry:
+                            out.append(f"    off{k} = _np.arange(t{k}, "
+                                       f"dtype=_np.int64) - "
+                                       f"_np.repeat(csum{k} - cnt{k}, cnt{k})")
+                            base = f"lb{k}" if lb_static[k] else f"lb{k}[idx{k}]"
+                            out.append(f"    d{k} = {base} + off{k}")
+                    out.append(f"    m = t{k}")
+            if kind == "scan":
+                cols = ", ".join(f"d{k}" for k in range(n))
+                out.append(f"    return _np.stack(({cols},), axis=1)")
+            else:
+                out.append("    return m")
+            return out
+
+        return "\n".join(body("scan") + [""] + body("count")) + "\n"
+
+    def _compile_np_fns(self) -> None:
+        def build():
+            src = self._emit_numpy()
+            ns: dict = {"_np": np}
+            exec(compile(src, f"<loopnest-np {self.poly.dim_names}>", "exec"), ns)
+            return (src, ns["__scan_np"], ns["__count_np"])
+
+        self._np_source, self._scan_np_fn, self._count_np_fn = \
+            _cache_slot(self._cache_key, "numpy", build)
+
+    def generated_numpy_source(self) -> str:
+        """The generated NumPy batch enumerator (docs/debug)."""
+        if self._scan_np_fn is None and self.ndim:
+            self._compile_np_fns()
+        return self._np_source or ""
+
     # --------------------------------------------------------------- iterate
     def iterate(self, params: dict[str, int] | Sequence[int] = ()) -> Iterator[tuple[int, ...]]:
-        """Yield every integer point (requires bounded dims)."""
+        """Yield every integer point (requires bounded dims).
+
+        The ``numpy`` backend shares the compiled scalar path here; its batch
+        API is :meth:`iterate_array`.
+        """
         pv = self._param_vec(params)
         if self.ndim == 0:
             return iter((((),) if self.feasible(pv) else ()))
-        if self.backend == "compiled":
+        if self.backend != "fraction":
             if self._scan_fn is None:
                 self._compile_fns()
             return self._scan_fn(pv)
         return self._iterate_fraction(pv)
+
+    def iterate_array(self, params: dict[str, int] | Sequence[int] = ()) -> "np.ndarray":
+        """All integer points as a raveled ``(N, ndim)`` int64 array.
+
+        Lexicographic row order, identical to :meth:`iterate`.  Whole levels
+        are emitted as index arithmetic (generated NumPy source) — no
+        per-point Python dispatch.  Available on every backend.
+        """
+        pv = self._param_vec(params)
+        if self.ndim == 0:
+            n = 1 if self.feasible(pv) else 0
+            return np.zeros((n, 0), dtype=np.int64)
+        if self._scan_np_fn is None:
+            self._compile_np_fns()
+        return self._scan_np_fn(pv)
+
+    def count_vectorized(self, params: dict[str, int] | Sequence[int] = ()) -> int:
+        """Point count via the generated NumPy enumerator (array bounds)."""
+        pv = self._param_vec(params)
+        if self.ndim == 0:
+            return 1 if self.feasible(pv) else 0
+        if self._count_np_fn is None:
+            self._compile_np_fns()
+        return int(self._count_np_fn(pv))
 
     def _iterate_fraction(self, pv) -> Iterator[tuple[int, ...]]:
         if not self.feasible(pv):
@@ -382,7 +621,7 @@ class LoopNest:
         pv = self._param_vec(params)
         if self.ndim == 0:
             return 1 if self.feasible(pv) else 0
-        if self.backend == "compiled":
+        if self.backend != "fraction":
             if self._count_fn is None:
                 self._compile_fns()
             return self._count_fn(pv)

@@ -7,7 +7,6 @@ in its natural [B, S, H, D] layout.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .flash_attention import flash_attention_hm
 from .ssd import ssd_pallas

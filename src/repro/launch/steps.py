@@ -5,8 +5,6 @@ ShapeDtypeStruct inputs under the production mesh.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

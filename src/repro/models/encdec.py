@@ -12,7 +12,6 @@ diamond case): every decoder tile depends on every encoder tile.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

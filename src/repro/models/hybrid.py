@@ -71,7 +71,6 @@ def forward(cfg: ArchConfig, params, tokens, *, caches=None, pos_offset=0,
     positions = jnp.arange(S) + pos_offset
 
     # Group SSM layers between attention applications into scans.
-    k = cfg.shared_attn_every or (cfg.n_layers + 1)
     new_ssm_caches = []
     new_attn_caches = []
     ssm_idx = 0

@@ -9,7 +9,6 @@ materialize an S×S score matrix even on the XLA path.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -84,7 +83,7 @@ def _attn_chunked(q, k, v, *, causal: bool, q_pos, kv_pos,
             qb, pb_q = qb_and_pos
 
             def body(carry, inp):
-                m, l, acc = carry
+                m, lsum, acc = carry
                 kb, vb, pb = inp
                 s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
                                preferred_element_type=jnp.float32) * scale
@@ -98,7 +97,7 @@ def _attn_chunked(q, k, v, *, causal: bool, q_pos, kv_pos,
                 m_new = jnp.maximum(m, s.max(axis=-1))
                 p = jnp.exp(s - m_new[..., None])
                 corr = jnp.exp(m - m_new)
-                l_new = l * corr + p.sum(axis=-1)
+                l_new = lsum * corr + p.sum(axis=-1)
                 acc_new = acc * corr[..., None] + jnp.einsum(
                     "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
                     preferred_element_type=jnp.float32)
@@ -109,9 +108,9 @@ def _attn_chunked(q, k, v, *, causal: bool, q_pos, kv_pos,
             a0 = jnp.zeros((B, Hkv, G, q_block, Dv), jnp.float32)
             body = jax.checkpoint(
                 body, policy=jax.checkpoint_policies.nothing_saveable)
-            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
-                                          (kc_g, vc_g, pc_g))
-            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                             (kc_g, vc_g, pc_g))
+            out = acc / jnp.maximum(lsum, 1e-30)[..., None]
             return out.astype(q.dtype)        # [B,Hkv,G,q_block,Dv]
         return jax.checkpoint(
             q_body, policy=jax.checkpoint_policies.nothing_saveable)

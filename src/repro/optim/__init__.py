@@ -7,9 +7,7 @@ HBM budget (see EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax

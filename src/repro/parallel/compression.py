@@ -77,7 +77,6 @@ def make_compressed_allreduce(mesh: Mesh, dp_spec, axis: str = "data"):
     def apply(grads):
         def region(g):
             return compressed_psum_grads(g, mesh, axis)
-        specs = jax.tree.map(lambda _: P(*([None])), grads)
         raise NotImplementedError(
             "use compressed_psum_grads inside a shard_map training region")
 

@@ -22,7 +22,6 @@ wavefront (1F1B-family schedule) with no hand-written send/recv.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -122,7 +121,6 @@ def pipelined_forward(stage_fn: Callable, stage_params: PyTree,
 def sequential_reference(stage_fn: Callable, stage_params: PyTree,
                          microbatches: jax.Array) -> jax.Array:
     """Oracle: apply all stages to every microbatch sequentially."""
-    n_stages = jax.tree.leaves(stage_params)[0].shape[0]
 
     def apply_all(x):
         def body(h, p):

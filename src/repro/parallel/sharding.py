@@ -12,7 +12,7 @@ shapes; 8-bit states are flat [nblocks, 256] and get ZeRO 'data' sharding).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -167,8 +167,6 @@ def opt_state_specs(opt_state: PyTree, param_spec_tree: PyTree, mesh: Mesh,
     """Moments follow the param spec (+ZeRO); 8-bit blocks shard over data."""
     from ..optim import MomentState
 
-    dps = dp_axes(mesh)
-    dp_n = int(np.prod([mesh.shape[a] for a in dps]))
     flat_p, treedef = jax.tree.flatten(param_spec_tree,
                                        is_leaf=lambda x: isinstance(x, P))
     flat_mv = treedef.flatten_up_to(opt_state["mv"])

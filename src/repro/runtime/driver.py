@@ -18,13 +18,9 @@ XLA cannot see):
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-import jax
-import numpy as np
 
 from ..checkpoint import AsyncCheckpointer, latest_step, restore
 from ..core.edt.threaded import ThreadedAutodec

@@ -8,7 +8,8 @@ except ImportError:  # property tests skip; deterministic tests still run
     from hypo_stub import HealthCheck, given, settings, st
 
 from repro.core.edt import (MODELS, TiledTaskGraph, run_graph_threaded,
-                            run_model, synthesize, validate_order)
+                            run_model, simulate_schedule, synthesize,
+                            validate_order)
 from repro.core.edt.codegen import emit_autodec, emit_prescribed, emit_tags
 from repro.core.poly import Tiling
 from repro.core.programs import PROGRAMS
@@ -70,7 +71,7 @@ def test_graph_acyclic_and_roots(prog, tilings, params):
     roots = set(g.roots(params))
     assert roots == {t for t in m.tasks if m.pred_n[t] == 0}
     ws = synthesize(g, params)
-    assert sum(len(l) for l in ws.levels) == len(m.tasks)
+    assert sum(len(lv) for lv in ws.levels) == len(m.tasks)
     # wavefront levels respect edges
     for t in m.tasks:
         for s in m.succ[t]:
@@ -147,6 +148,42 @@ def test_threaded_autodec_exactly_once_and_ordered():
     tasks = list(g.tasks(params))
     assert sorted(order) == sorted(tasks)
     assert len(set(order)) == len(tasks)
+
+
+@pytest.mark.parametrize("prog,tilings,params", CASES[:4],
+                         ids=[c[0] for c in CASES[:4]])
+def test_simulate_schedule_batched(prog, tilings, params):
+    """Level-sized batches through Sim.make_ready_batch: every task runs
+    once, levels run in order, and the makespan is the level-barrier sum."""
+    import math
+    g = TiledTaskGraph(PROGRAMS[prog](), tilings, backend="numpy")
+    ws = synthesize(g, params)
+    workers = 3
+    sim = simulate_schedule(ws, workers=workers, task_dur=1.0)
+    assert sorted(sim.exec_order) == sorted(t for lv in ws.levels for t in lv)
+    assert sim.counters.makespan == sum(
+        math.ceil(len(lv) / workers) for lv in ws.levels)
+    # a task never starts before its level's predecessors completed
+    pos = {t: i for i, t in enumerate(sim.exec_order)}
+    for li in range(1, len(ws.levels)):
+        first_this = min(pos[t] for t in ws.levels[li])
+        last_prev = max(pos[t] for t in ws.levels[li - 1])
+        assert first_this > last_prev
+
+
+def test_make_ready_batch_matches_sequential_enqueue():
+    from repro.core.edt import Sim
+    runs = []
+    s1 = Sim(workers=2, task_dur=1.0)
+    for i in range(5):
+        s1.make_ready(i, lambda i=i: runs.append(("a", i)))
+    s1.run()
+    s2 = Sim(workers=2, task_dur=1.0)
+    s2.make_ready_batch((i, (lambda i=i: runs.append(("b", i)))) for i in range(5))
+    s2.run()
+    assert s1.exec_order == s2.exec_order
+    assert s1.counters.makespan == s2.counters.makespan
+    assert [i for t, i in runs if t == "a"] == [i for t, i in runs if t == "b"]
 
 
 def test_codegen_emission():

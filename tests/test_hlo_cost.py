@@ -5,7 +5,6 @@ bodies once; analyze_hlo must recover the true totals.
 """
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_cost import analyze_hlo
 

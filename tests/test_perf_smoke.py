@@ -1,11 +1,13 @@
 """Fast smoke checks of the benchmark entry points (< 1 minute total).
 
 These do not assert absolute timings (CI noise); they assert that every
-benchmark section runs end-to-end in smoke mode, emits its CSV rows, and
-that the taskgen benchmark's built-in backend-equality checks pass — plus
-one sanity bound: the compiled backend must not be slower than the Fraction
-reference on a real materialize.
+benchmark section runs end-to-end in smoke mode, emits its CSV rows and
+machine-readable payload, and that the taskgen benchmark's built-in
+backend-equality checks pass — plus two sanity bounds: compiled must not be
+slower than Fraction, and the numpy index-array enumeration must not be
+slower than compiled, on a real materialize.
 """
+import json
 import time
 
 from repro.core.edt import TiledTaskGraph
@@ -15,22 +17,32 @@ from repro.core.programs import PROGRAMS
 
 def _collect(run_fn, **kw):
     lines = []
-    run_fn(emit=lambda *a, **k: lines.append(str(a[0]) if a else ""), **kw)
-    return lines
+    out = run_fn(emit=lambda *a, **k: lines.append(str(a[0]) if a else ""), **kw)
+    return lines, out
 
 
 def test_bench_taskgen_smoke():
     from benchmarks import bench_taskgen
-    lines = _collect(bench_taskgen.run, smoke=True)
-    # header + one row per smoke program + geomean line
-    assert len(lines) == 2 + len(bench_taskgen.SMOKE_SUITE)
-    assert lines[0].startswith("program,")
-    assert "geomean" in lines[-1]
+    lines, out = _collect(bench_taskgen.run, smoke=True)
+    rows = [ln for ln in lines if ln and not ln.startswith("#")]
+    # header + one row per (smoke program, backend)
+    assert rows[0].startswith("program,backend,")
+    n_expect = len(bench_taskgen.SMOKE_SUITE) * len(bench_taskgen.BACKENDS)
+    assert len(rows) == 1 + n_expect
+    assert any("geomean" in ln for ln in lines)
+    # stable machine-readable schema: (name, backend, tasks/sec) per row
+    assert out["schema_version"] == 1
+    assert len(out["rows"]) == n_expect
+    for r in out["rows"]:
+        assert {"program", "backend", "tasks_per_s"} <= set(r)
+        assert r["backend"] in bench_taskgen.BACKENDS
+    assert json.dumps(out)  # artifact must be JSON-serializable
+    assert out["geomean"]["numpy_enum_over_compiled"] > 0
 
 
 def test_bench_compile_smoke():
     from benchmarks import bench_compile
-    lines = _collect(bench_compile.run, smoke=True)
+    lines, _ = _collect(bench_compile.run, smoke=True)
     assert len(lines) == 2 + len(bench_compile.SMOKE_SUITE)
     assert "TIMEOUT" not in "\n".join(lines)
 
@@ -43,10 +55,19 @@ def test_bench_sync_and_executor_smoke():
     assert all(v > 0 for v in out.values())
 
 
-def test_run_harness_smoke_mode():
-    """`python -m benchmarks.run --smoke --only taskgen` exits cleanly."""
+def test_run_harness_smoke_mode(tmp_path):
+    """`python -m benchmarks.run --smoke --only taskgen --json F` exits
+    cleanly and writes the stable artifact schema."""
     from benchmarks import run as harness
-    assert harness.main(["--smoke", "--only", "taskgen"]) == 0
+    path = tmp_path / "perf.json"
+    assert harness.main(["--smoke", "--only", "taskgen",
+                         "--json", str(path)]) == 0
+    report = json.loads(path.read_text())
+    assert report["schema_version"] == 1
+    assert report["smoke"] is True
+    sec = report["sections"]["taskgen"]
+    assert sec["ok"] is True
+    assert sec["data"]["rows"], "taskgen rows missing from artifact"
 
 
 def test_compiled_not_slower_than_fraction():
@@ -63,3 +84,22 @@ def test_compiled_not_slower_than_fraction():
     t_f = time.perf_counter() - t0
     assert mc.succ == mf.succ
     assert t_c < t_f  # compiled wins by ~50x; < is a generous CI-safe bound
+
+
+def test_numpy_enum_not_slower_than_compiled():
+    """The vectorized index-array enumeration must beat the scalar compiled
+    materialize (it wins by ~5-10x; < is a generous CI-safe bound)."""
+    tilings = {"S": Tiling((1, 1))}
+    params = {"K": 40}
+    gc = TiledTaskGraph(PROGRAMS["diamond"](), tilings)
+    gn = TiledTaskGraph(PROGRAMS["diamond"](), tilings, backend="numpy")
+    gc.materialize(params)          # warm both codegens outside the timing
+    gn.index_graph(params)
+    t0 = time.perf_counter()
+    mc = gc.materialize(params)
+    t_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ig = gn.index_graph(params)
+    t_n = time.perf_counter() - t0
+    assert ig.n == len(mc.tasks) and ig.n_edges == mc.n_edges
+    assert t_n < t_c

@@ -1,5 +1,4 @@
 """Unit + property tests for the exact polyhedral engine (paper §3)."""
-import itertools
 from fractions import Fraction as F
 
 import pytest
@@ -122,7 +121,6 @@ def test_inflation_superset_and_same_integers(g):
     exact = tile_dependence(delta, 2, Tiling(g), Tiling(g), method="exact")
     assert infl.contains(exact)
     # constraint count: inflation must not add constraints (no vertex blowup)
-    base = tile_dependence(delta, 2, Tiling(g), Tiling(g), method="inflate")
     assert len(infl.ineqs) <= len(exact.ineqs) + len(exact.eqs) * 2 + 4
 
 

@@ -3,7 +3,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def _run(src: str, devices: int = 8, timeout: int = 600):

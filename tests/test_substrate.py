@@ -1,8 +1,5 @@
 """Substrate tests: data determinism, checkpoint atomicity + async chain,
 fault-tolerant driver (restart, straggler backup), optimizer, compression."""
-import os
-import shutil
-import threading
 import time
 
 import jax
@@ -147,7 +144,7 @@ def test_adamw_reduces_loss(bits):
 
     l0 = float(loss(w))
     for _ in range(20):
-        l, g = jax.value_and_grad(loss)(w)
+        lval, g = jax.value_and_grad(loss)(w)
         w, st = apply_updates(opt_cfg, w, g, st)
     assert float(loss(w)) < l0 * 0.5
     if bits == 8:

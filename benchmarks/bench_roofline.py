@@ -95,8 +95,7 @@ def hbm_traffic(rec: dict, cfg) -> float:
     opt_mem = cfg.n_params() * (2.0 if opt_b == 8 else 8.0) / n_dev
     S, B = _seq(shape), _batch(shape)
     A = cfg.n_layers * B * min(S, 2 ** 31) * cfg.d_model * 2.0 / n_dev
-    V = B * (S if not shape.startswith(("decode", "long")) else 1) \
-        * cfg.vocab * 2.0 / n_dev
+    V = B * (S if not shape.startswith(("decode", "long")) else 1) * cfg.vocab * 2.0 / n_dev
     kind = ("train" if shape.startswith("train") else
             "decode" if shape.startswith(("decode", "long")) else "prefill")
     if kind == "train":
@@ -121,8 +120,7 @@ def _decode_cache_bytes(cfg, shape: str) -> float:
     if cfg.family == "hybrid":
         s = cfg.ssm
         di = s.expand * cfg.d_model
-        ssm_state = (cfg.n_layers * 0.85) * B * (di // s.head_dim) \
-            * s.head_dim * s.d_state * 4.0
+        ssm_state = (cfg.n_layers * 0.85) * B * (di // s.head_dim) * s.head_dim * s.d_state * 4.0
         W_att = min(S, cfg.sliding_window or S)
         n_attn = sum(1 for i in range(cfg.n_layers)
                      if cfg.shared_attn_every and
@@ -155,8 +153,7 @@ def analyze(rec: dict) -> dict | None:
     hlo_global = flops * rec["n_devices"]
     useful = model_flops / hlo_global if hlo_global else 0.0
     t_star = max(t_compute, t_memory, t_coll)
-    frac = (model_flops / rec["n_devices"] / PEAK_FLOPS) / t_star \
-        if t_star > 0 else 0.0
+    frac = (model_flops / rec["n_devices"] / PEAK_FLOPS) / t_star if t_star > 0 else 0.0
     return {
         "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
         "t_compute_s": t_compute, "t_memory_s": t_memory,

@@ -7,7 +7,9 @@ Sections:
   compile   — §5.1 Fig 6: compression vs projection dependence-compute time
   taskgen   — task-generation throughput: fraction vs compiled vs numpy
               scanning backends on materialize / index_graph / pred_count /
-              roots (graphs verified identical)
+              roots (graphs verified identical), plus sharded rows
+              (``shards=2/4`` through the process-pool engine) and the
+              ≥1M-task shard-scale curve
   sync      — §2 Table 2: overhead counters per synchronization model
   executor  — §5.2: makespan comparison across models (+ threaded autodec)
   roofline  — §Roofline terms from the dry-run artifacts (if present)
@@ -17,20 +19,23 @@ subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 1):
+diff perf artifacts across PRs.  Stable schema (version 2):
 
-    {"schema_version": 1, "smoke": bool,
+    {"schema_version": 2, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
-``{"rows": [{"program", "backend", "tasks_per_s", ...}], "geomean": ...}``)
-when it is JSON-serializable, else its ``repr``.
+``{"rows": [{"program", "backend", "shards", "tasks_per_s", ...}],
+"geomean": ..., "shard_scale": [...]}``) when it is JSON-serializable,
+else its ``repr``.  Sharded rows record their shard count in ``shards``;
+single-process rows carry ``shards = 1``.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
 import json
+import os
 import sys
 import time
 
@@ -59,7 +64,8 @@ def main(argv=None) -> int:
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 1, "smoke": bool(args.smoke), "sections": {}}
+    report = {"schema_version": 2, "smoke": bool(args.smoke),
+              "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)
         t0 = time.time()

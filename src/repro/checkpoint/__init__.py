@@ -83,8 +83,8 @@ def restore(ckpt_dir: str | Path, step: int, target: PyTree) -> PyTree:
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     leaves, treedef = _flatten(target)
-    assert manifest["n_arrays"] == len(leaves), \
-        f"checkpoint has {manifest['n_arrays']} leaves, target {len(leaves)}"
+    assert manifest["n_arrays"] == len(leaves), (
+        f"checkpoint has {manifest['n_arrays']} leaves, target {len(leaves)}")
     out = []
     for i, leaf in enumerate(leaves):
         arr = np.load(d / f"arr_{i}.npy")

@@ -19,8 +19,7 @@ def tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` / ``pltpu.TPUCompilerParams`` (renamed)."""
     from jax.experimental.pallas import tpu as pltpu
 
-    cls = getattr(pltpu, "CompilerParams", None) \
-        or getattr(pltpu, "TPUCompilerParams")
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
     return cls(**kwargs)
 
 

@@ -1,20 +1,24 @@
 """Event-driven task graphs: construction (§3/§4), sync models (§2), execution."""
 from .executor import Counters, Gauge, Sim
+from .shard import ShardPlan, ShardSpec, plan_shards, scan_sharded
 from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
                          run_counted, run_model, run_prescribed, run_tags1,
                          run_tags2, validate_order)
 from .taskgraph import (Dependence, IndexedGraph, MaterializedGraph,
                         PolyhedralProgram, Statement, TaskId, TiledTaskGraph)
 from .threaded import ThreadedAutodec, run_graph_threaded
-from .wavefront import WavefrontSchedule, simulate_schedule, synthesize
+from .wavefront import (IndexedSchedule, WavefrontSchedule, simulate_indexed,
+                        simulate_schedule, synthesize, synthesize_indexed)
 
 __all__ = [
     "PolyhedralProgram", "Statement", "Dependence", "TiledTaskGraph",
     "MaterializedGraph", "IndexedGraph", "TaskId",
+    "ShardSpec", "ShardPlan", "plan_shards", "scan_sharded",
     "Sim", "Counters", "Gauge",
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",
     "run_autodec", "run_autodec_nosrc",
     "ThreadedAutodec", "run_graph_threaded",
     "WavefrontSchedule", "synthesize", "simulate_schedule",
+    "IndexedSchedule", "synthesize_indexed", "simulate_indexed",
 ]

@@ -153,6 +153,17 @@ class Sim:
         self.ready.extend(items)
         self._dispatch()
 
+    def make_ready_ids(self, ids, run_fn: Callable[[], None]) -> None:
+        """Enqueue a level of integer task ids sharing one completion fn.
+
+        Fed straight from merged index arrays (sharded materialization /
+        :class:`IndexedSchedule` levels): keys are plain ints and every
+        task of the level shares ``run_fn``, so driving a million-task
+        schedule allocates no per-task closures or label tuples.
+        """
+        self.ready.extend((int(i), run_fn) for i in ids)
+        self._dispatch()
+
     def _dispatch(self) -> None:
         if not self.gate_open:
             return

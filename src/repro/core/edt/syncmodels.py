@@ -429,5 +429,4 @@ def validate_order(graph: TiledTaskGraph, params: dict, result: RunResult,
         f"missing e.g. {list(all_tasks - set(start))[:3]}")
     for t in all_tasks:
         for s in graph.successors(t, params):
-            assert start[s] >= start[t] + task_dur, \
-                f"dependence violated: {t} -> {s}"
+            assert start[s] >= start[t] + task_dur, f"dependence violated: {t} -> {s}"

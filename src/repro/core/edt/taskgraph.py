@@ -22,6 +22,7 @@ execution inside the task.
 from __future__ import annotations
 
 import itertools
+import os
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
@@ -49,6 +50,44 @@ def _int_rows(poly: Polyhedron) -> tuple[tuple, tuple]:
     """Constraint rows scaled to plain ints (for fast point containment)."""
     return (tuple(_row_ints(r) for r in poly.ineqs),
             tuple(_row_ints(r) for r in poly.eqs))
+
+
+def _coord_keys(arr: "np.ndarray"):
+    """Mixed-radix keys over the block's bounding box: (keys, mins, strides).
+
+    Lexicographic row order makes the keys strictly increasing, so they
+    index the block via searchsorted — or directly, when the block fills
+    its bounding box (see :func:`_map_local`).
+    """
+    n, d = arr.shape
+    if n and d:
+        mins = arr.min(axis=0)
+        extents = arr.max(axis=0) - mins + 1
+        strides = np.ones(d, dtype=np.int64)
+        for j in range(d - 2, -1, -1):
+            strides[j] = strides[j + 1] * extents[j + 1]
+        keys = (arr - mins) @ strides
+    else:
+        mins = np.zeros(d, dtype=np.int64)
+        strides = np.zeros(d, dtype=np.int64)
+        keys = np.zeros(n, dtype=np.int64)
+    return keys, mins, strides
+
+
+def _map_local(keys: "np.ndarray", mins, strides,
+               coords: "np.ndarray") -> "np.ndarray":
+    """Coordinate rows -> local task indices within one statement block.
+
+    Dense fast path: strictly-increasing keys starting at 0 and ending at
+    n-1 must be exactly ``arange(n)`` (mixed-radix keys are injective), so
+    the key *is* the index and the searchsorted disappears — boxes, i.e.
+    the million-task scaling cases, never pay the log-factor.
+    """
+    k = (coords - mins) @ strides
+    n = keys.shape[0]
+    if n and keys[0] == 0 and int(keys[-1]) == n - 1:
+        return k
+    return np.searchsorted(keys, k)
 
 
 def _contains_int(ineqs: tuple, eqs: tuple, col: tuple) -> bool:
@@ -93,8 +132,8 @@ class PolyhedralProgram:
         self.statements[name] = st
         if not self.param_names:
             self.param_names = domain.param_names
-        assert domain.param_names == self.param_names, \
-            "all statements must share the parameter list"
+        assert domain.param_names == self.param_names, (
+            "all statements must share the parameter list")
         return st
 
     def add_dependence(self, src: str, tgt: str, delta: Polyhedron,
@@ -120,6 +159,8 @@ class _TiledDep:
     # lazy joint nest over (src dims, tgt dims): one vectorized scan of this
     # polyhedron yields every edge of the dependence (numpy backend)
     joint_nest: Optional[LoopNest] = None
+    # position in TiledTaskGraph.tiled_deps — the shard planner's unit key
+    idx: int = -1
 
 
 class TiledTaskGraph:
@@ -195,6 +236,7 @@ class TiledTaskGraph:
                                                backend=backend),
                 int_ineqs=ii,
                 int_eqs=ie,
+                idx=len(self.tiled_deps),
             )
             self.tiled_deps.append(td)
             self._out[dep.src].append(td)
@@ -203,6 +245,9 @@ class TiledTaskGraph:
         # depends only on the graph, not on params).
         self._roots_projs: Optional[dict[str, list[Polyhedron]]] = None
         self._roots_rows: dict[str, list[tuple[tuple, tuple]]] = {}
+        # driver-side restricted nests for sharded block counting
+        # ((kind, key) -> (nest, diag nest); see repro.core.edt.shard)
+        self._shard_nests: dict = {}
 
     # ------------------------------------------------------------- tasks
     def tasks(self, params: dict[str, int]) -> Iterator[TaskId]:
@@ -284,13 +329,35 @@ class TiledTaskGraph:
                             for n, projs in out.items()}
         return out
 
-    def roots(self, params: dict[str, int]) -> Iterator[TaskId]:
+    def roots(self, params: dict[str, int], shards: Optional[int] = None,
+              parallel: bool = False, pool=None) -> Iterator[TaskId]:
         """Tasks with no predecessors (the master's scan, made O(1)-startup by
-        preschedule in the autodec model)."""
+        preschedule in the autodec model).
+
+        With ``shards=n`` the root set derives from the merged sharded index
+        graph (``pred_n == 0`` per statement block) — same tasks, same
+        order as the in-process scans.
+        """
+        n_shards = self._resolve_shards(shards, parallel)
+        if n_shards > 1:
+            return self._roots_indexed(
+                self.index_graph(params, shards=n_shards, pool=pool))
         pv = self._pv(params)
         if self.backend == "numpy":
             return self._roots_numpy(pv)
         return self._roots_scalar(pv)
+
+    def _roots_indexed(self, ig: "IndexedGraph") -> Iterator[TaskId]:
+        """Zero in-degree tasks straight from merged index arrays."""
+        off = 0
+        for name, arr in ig.stmt_blocks:
+            n = arr.shape[0]
+            idx = np.flatnonzero(ig.pred_n[off:off + n] == 0)
+            if idx.size:
+                rows = arr[idx].tolist()
+                for r in rows:
+                    yield (name, tuple(r))
+            off += n
 
     def _roots_scalar(self, pv: list[int]) -> Iterator[TaskId]:
         self.roots_polyhedra()
@@ -363,7 +430,8 @@ class TiledTaskGraph:
             td.joint_nest = LoopNest(td.delta_t)
         return td.joint_nest
 
-    def _stmt_index(self, pv: list[int], with_tasks: bool = True) -> dict:
+    def _stmt_index(self, pv: list[int], with_tasks: bool = True,
+                    tiles: Optional[dict] = None) -> dict:
         """Per statement: coord array, ravel-key index, optional TaskIds.
 
         Tile coordinates are encoded into mixed-radix keys over the
@@ -372,38 +440,73 @@ class TiledTaskGraph:
         no per-task hashing anywhere in the batch paths.  TaskId tuples
         (the scalar-world labels) are only built when asked for: the pure
         array paths (``index_graph``) never pay the per-task tuple cost.
+        ``tiles`` injects pre-scanned coordinate blocks (the sharded merge
+        path) in place of in-process enumeration.
         """
         info = {}
         for name in self.program.statements:
-            arr = self.tile_nests[name].iterate_array(pv)
+            arr = (tiles[name] if tiles is not None
+                   else self.tile_nests[name].iterate_array(pv))
             ts = _task_ids(name, arr) if with_tasks else None
-            n, d = arr.shape
-            if n and d:
-                mins = arr.min(axis=0)
-                extents = arr.max(axis=0) - mins + 1
-                strides = np.ones(d, dtype=np.int64)
-                for j in range(d - 2, -1, -1):
-                    strides[j] = strides[j + 1] * extents[j + 1]
-                keys = (arr - mins) @ strides
-            else:
-                mins = np.zeros(d, dtype=np.int64)
-                strides = np.zeros(d, dtype=np.int64)
-                keys = np.zeros(n, dtype=np.int64)
+            keys, mins, strides = _coord_keys(arr)
             info[name] = (ts, keys, mins, strides, arr)
         return info
 
-    def _dep_edges(self, td: _TiledDep, pv: list[int]) -> "np.ndarray":
+    def _dep_edges(self, td: _TiledDep, pv: list[int],
+                   raw: Optional["np.ndarray"] = None) -> "np.ndarray":
         """All (src tile, tgt tile) edge rows of one dependence, self pairs
-        excluded — a single vectorized scan of the joint polyhedron."""
-        edges = self._joint_nest(td).iterate_array(pv)
+        excluded — a single vectorized scan of the joint polyhedron, or the
+        merged per-shard blocks of that same scan (``raw``)."""
+        edges = raw if raw is not None else self._joint_nest(td).iterate_array(pv)
         ns = self.tilings[td.dep.src].ndim
         if td.dep.src == td.dep.tgt and edges.shape[0]:
             keep = (edges[:, :ns] != edges[:, ns:]).any(axis=1)
             edges = edges[keep]
         return edges
 
-    def _materialize_numpy(self, pv: list[int]) -> "MaterializedGraph":
-        info = self._stmt_index(pv)
+    def _stmt_bases(self, info) -> dict[str, int]:
+        """Global id of each statement's first task (program order)."""
+        base: dict[str, int] = {}
+        n = 0
+        for name in self.program.statements:
+            base[name] = n
+            n += info[name][4].shape[0]
+        return base
+
+    def _edge_indices(self, td: _TiledDep, pv: list[int], info, scans,
+                      base: dict[str, int], global_ids: bool = False):
+        """One dependence's edges as (src, tgt) task-index columns.
+
+        Self pairs are dropped.  Worker-mapped sharded scans pass through
+        untouched (they are already global ids); raw rows — single-process
+        or sharded-raw — map through :func:`_map_local`.
+        """
+        sname, tname = td.dep.src, td.dep.tgt
+        if scans is not None and td.idx in scans.edges_idx:
+            gsrc, gtgt = scans.edges_idx[td.idx]
+            if global_ids:
+                return gsrc, gtgt
+            return gsrc - base[sname], gtgt - base[tname]
+        edges = self._dep_edges(
+            td, pv,
+            raw=scans.edges_raw.get(td.idx) if scans is not None else None)
+        if not edges.shape[0]:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z
+        ns = self.tilings[sname].ndim
+        _, keys_s, mins_s, strides_s, _ = info[sname]
+        _, keys_t, mins_t, strides_t, _ = info[tname]
+        src_idx = _map_local(keys_s, mins_s, strides_s, edges[:, :ns])
+        tgt_idx = _map_local(keys_t, mins_t, strides_t, edges[:, ns:])
+        if global_ids:
+            return src_idx + base[sname], tgt_idx + base[tname]
+        return src_idx, tgt_idx
+
+    def _materialize_numpy(self, pv: list[int],
+                           scans=None) -> "MaterializedGraph":
+        info = self._stmt_index(
+            pv, tiles=scans.tiles if scans is not None else None)
+        base = self._stmt_bases(info)
         tasks: list[TaskId] = []
         succ: dict[TaskId, list[TaskId]] = {}
         stmt_succ: dict[str, list[list[TaskId]]] = {}
@@ -418,19 +521,14 @@ class TiledTaskGraph:
         for name in self.program.statements:
             for td in self._out[name]:
                 tgt_name = td.dep.tgt
-                edges = self._dep_edges(td, pv)
-                ne = edges.shape[0]
+                src_idx, tgt_idx = self._edge_indices(td, pv, info, scans, base)
+                ne = src_idx.shape[0]
                 if not ne:
                     continue
-                ns = self.tilings[name].ndim
-                src, tgt = edges[:, :ns], edges[:, ns:]
-                _, keys_s, mins_s, strides_s, _ = info[name]
-                ts_t, keys_t, mins_t, strides_t, _ = info[tgt_name]
-                tgt_idx = np.searchsorted(keys_t, (tgt - mins_t) @ strides_t)
+                ts_t = info[tgt_name][0]
                 pred_counts[tgt_name] += np.bincount(
                     tgt_idx, minlength=len(ts_t))
-                src_idx = np.searchsorted(keys_s, (src - mins_s) @ strides_s)
-                tg = _task_ids(tgt_name, tgt)
+                tg = _task_ids(tgt_name, info[tgt_name][4][tgt_idx])
                 # edges are lex-sorted by source: group bounds are where the
                 # source index changes, then one list-extend per source task
                 starts = np.flatnonzero(
@@ -445,7 +543,24 @@ class TiledTaskGraph:
             pred_n.update(zip(info[name][0], pred_counts[name].tolist()))
         return MaterializedGraph(tasks, succ, pred_n)
 
-    def index_graph(self, params: dict[str, int]) -> "IndexedGraph":
+    def _resolve_shards(self, shards: Optional[int], parallel) -> int:
+        """``shards=``/``parallel=`` -> effective shard count (0 = in-process).
+
+        ``parallel=True`` is the convenience spelling for one shard per
+        available core; an explicit ``shards=`` always wins.
+        """
+        if shards is None and parallel:
+            return os.cpu_count() or 1
+        return int(shards or 0)
+
+    def _sharded_scans(self, params: dict[str, int], shards: int,
+                       pool=None) -> dict:
+        from .shard import scan_sharded  # local import: avoid cycle
+        return scan_sharded(self, params, shards, pool=pool)
+
+    def index_graph(self, params: dict[str, int],
+                    shards: Optional[int] = None, parallel: bool = False,
+                    pool=None) -> "IndexedGraph":
         """The whole task graph as flat index arrays (no per-task tuples).
 
         The numpy backend's native graph product: tasks are global integer
@@ -454,33 +569,30 @@ class TiledTaskGraph:
         two parallel int arrays, and ``pred_n`` is their bincount.  Pure
         array output: TaskId labels are derived lazily on access, so
         generation itself never touches per-task Python objects.
+
+        ``shards=n`` (or ``parallel=True``) fans the tile/edge scans out
+        across processes (see :mod:`.shard`) and merges the per-shard index
+        arrays — byte-identical output, any backend.  ``pool`` reuses an
+        existing ``ProcessPoolExecutor`` across calls.
         """
         pv = self._pv(params)
-        info = self._stmt_index(pv, with_tasks=False)
-        base: dict[str, int] = {}
-        blocks: list[tuple[str, np.ndarray]] = []
-        n = 0
-        for name in self.program.statements:
-            base[name] = n
-            arr = info[name][4]
-            n += arr.shape[0]
-            blocks.append((name, arr))
+        n_shards = self._resolve_shards(shards, parallel)
+        scans = (self._sharded_scans(params, n_shards, pool=pool)
+                 if n_shards > 1 else None)
+        info = self._stmt_index(
+            pv, with_tasks=False,
+            tiles=scans.tiles if scans is not None else None)
+        base = self._stmt_bases(info)
+        blocks = [(name, info[name][4]) for name in self.program.statements]
+        n = sum(arr.shape[0] for _, arr in blocks)
         srcs, tgts = [], []
         for name in self.program.statements:
             for td in self._out[name]:
-                edges = self._dep_edges(td, pv)
-                if not edges.shape[0]:
-                    continue
-                tgt_name = td.dep.tgt
-                ns = self.tilings[name].ndim
-                _, keys_s, mins_s, strides_s, _ = info[name]
-                _, keys_t, mins_t, strides_t, _ = info[tgt_name]
-                src_idx = np.searchsorted(
-                    keys_s, (edges[:, :ns] - mins_s) @ strides_s)
-                tgt_idx = np.searchsorted(
-                    keys_t, (edges[:, ns:] - mins_t) @ strides_t)
-                srcs.append(src_idx + base[name])
-                tgts.append(tgt_idx + base[tgt_name])
+                gsrc, gtgt = self._edge_indices(td, pv, info, scans, base,
+                                                global_ids=True)
+                if gsrc.shape[0]:
+                    srcs.append(gsrc)
+                    tgts.append(gtgt)
         z = np.zeros(0, dtype=np.int64)
         edge_src = np.concatenate(srcs) if srcs else z
         edge_tgt = np.concatenate(tgts) if tgts else z
@@ -489,7 +601,9 @@ class TiledTaskGraph:
             pred_n=np.bincount(edge_tgt, minlength=n))
 
     # ------------------------------------------------------------ materialize
-    def materialize(self, params: dict[str, int]) -> "MaterializedGraph":
+    def materialize(self, params: dict[str, int],
+                    shards: Optional[int] = None, parallel: bool = False,
+                    pool=None) -> "MaterializedGraph":
         """Explicit adjacency (for tests / the prescribed model / wavefronts).
 
         Batched: the parameter vector, compiled scan functions, and
@@ -500,8 +614,17 @@ class TiledTaskGraph:
         to the per-task path.  The ``numpy`` backend goes further: each
         dependence's edge list is one vectorized scan of the joint Δ_T
         polyhedron (see ``_materialize_numpy``).
+
+        ``shards=n`` / ``parallel=True`` runs those scans on a process pool
+        (:mod:`.shard`) and merges the blocks — identical graph, any
+        backend.  Callers that only need arrays should prefer
+        :meth:`index_graph`, which never builds the per-task dicts.
         """
         pv = self._pv(params)
+        n_shards = self._resolve_shards(shards, parallel)
+        if n_shards > 1:
+            return self._materialize_numpy(
+                pv, scans=self._sharded_scans(params, n_shards, pool=pool))
         if self.backend == "numpy":
             return self._materialize_numpy(pv)
         tasks: list[TaskId] = []

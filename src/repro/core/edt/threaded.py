@@ -56,11 +56,16 @@ class ThreadedAutodec:
     def _get_or_create_then(self, key: Key, decrement: bool) -> None:
         fire = False
         with self._stripe(key):
+            if key in self._scheduled:
+                # counter already consumed: a preschedule that arrives after
+                # autodecs fired the task must not re-create it (that would
+                # call pred_count twice and leak a dead counter entry)
+                return
             if key not in self._counters:
                 self._counters[key] = self._pred_count(key)
             if decrement:
                 self._counters[key] -= 1
-            if self._counters[key] <= 0 and key not in self._scheduled:
+            if self._counters[key] <= 0:
                 self._scheduled.add(key)
                 del self._counters[key]  # GC at schedule time
                 fire = True

@@ -28,7 +28,7 @@ from typing import Optional
 import numpy as np
 
 from .executor import Sim
-from .taskgraph import TaskId, TiledTaskGraph
+from .taskgraph import IndexedGraph, TaskId, TiledTaskGraph
 
 
 @dataclass
@@ -50,13 +50,46 @@ class WavefrontSchedule:
                 "avg_width": n / max(1, self.depth)}
 
 
-def synthesize(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
+@dataclass
+class IndexedSchedule:
+    """Wavefront levels in pure index space: arrays of global task ids.
+
+    The million-task representation — no TaskId tuples, no dicts; levels
+    feed the executor straight from the merged arrays
+    (:func:`simulate_indexed` / :meth:`Sim.make_ready_ids`).  Ids within a
+    level ascend, so iteration order is deterministic.
+    """
+    levels: list["np.ndarray"]
+    level_of: "np.ndarray"   # level index per global task id
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def max_width(self) -> int:
+        return max((int(lv.size) for lv in self.levels), default=0)
+
+    def stats(self) -> dict:
+        n = int(self.level_of.shape[0])
+        return {"tasks": n, "depth": self.depth, "max_width": self.max_width,
+                "avg_width": n / max(1, self.depth)}
+
+
+def synthesize(graph: TiledTaskGraph, params: dict,
+               shards: Optional[int] = None,
+               parallel: bool = False, pool=None) -> WavefrontSchedule:
     """Longest-path leveling of the tile graph.
 
     ``numpy``-backend graphs level from flat index arrays (whole wavefronts
     per step); the scalar path materializes and walks the dict graph.  Both
-    produce identical schedules.
+    produce identical schedules.  ``shards=``/``parallel=`` fans the
+    underlying scans across processes (any backend) — the schedule is
+    unchanged, only generation parallelizes.
     """
+    if graph._resolve_shards(shards, parallel) > 1:
+        return _synthesize_arrays(graph, params, shards=shards,
+                                  parallel=parallel, pool=pool)
     if graph.backend == "numpy":
         return _synthesize_arrays(graph, params)
     g = graph.materialize(params)
@@ -85,7 +118,7 @@ def synthesize(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
     return WavefrontSchedule(levels, level)
 
 
-def _synthesize_arrays(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule:
+def _level_array(ig: IndexedGraph) -> "np.ndarray":
     """Vectorized Kahn + longest-path over flat edge arrays.
 
     Each iteration retires one wavefront: the frontier's out-edges are
@@ -93,9 +126,8 @@ def _synthesize_arrays(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule
     levels max-propagate with ``np.maximum.at``, and in-degrees fall by
     per-target counts (``np.unique``).  The next frontier comes from the
     decremented targets only — O(V + E log E) total, never a full-array
-    rescan per level.
+    rescan per level.  Returns the longest-path level per global task id.
     """
-    ig = graph.index_graph(params)
     n = ig.n
     order = np.argsort(ig.edge_src, kind="stable")
     es = ig.edge_src[order]
@@ -114,8 +146,7 @@ def _synthesize_arrays(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule
         if not tot:
             break
         csum = np.cumsum(counts)
-        eidx = np.repeat(starts - (csum - counts), counts) \
-            + np.arange(tot, dtype=np.int64)
+        eidx = np.repeat(starts - (csum - counts), counts) + np.arange(tot, dtype=np.int64)
         tg = et[eidx]
         np.maximum.at(level, tg, np.repeat(level[frontier] + 1, counts))
         touched, dec = np.unique(tg, return_counts=True)
@@ -123,13 +154,40 @@ def _synthesize_arrays(graph: TiledTaskGraph, params: dict) -> WavefrontSchedule
         # a task enters the frontier exactly when its last get is satisfied
         frontier = touched[indeg[touched] == 0]
     assert done == n, "cycle in task graph"
-    lv = level.tolist()
+    return level
+
+
+def _synthesize_arrays(graph: TiledTaskGraph, params: dict,
+                       shards: Optional[int] = None, parallel: bool = False,
+                       pool=None) -> WavefrontSchedule:
+    """Array-leveled schedule with TaskId labels (see :func:`_level_array`)."""
+    ig = graph.index_graph(params, shards=shards, parallel=parallel, pool=pool)
+    lv = _level_array(ig).tolist()
     level_of = dict(zip(ig.tasks, lv))
     buckets: dict[int, list[TaskId]] = {}
     for t, l_ in zip(ig.tasks, lv):
         buckets.setdefault(l_, []).append(t)
     levels = [sorted(buckets[l_]) for l_ in sorted(buckets)]
     return WavefrontSchedule(levels, level_of)
+
+
+def synthesize_indexed(graph: TiledTaskGraph, params: dict,
+                       shards: Optional[int] = None, parallel: bool = False,
+                       pool=None) -> tuple[IndexedGraph, IndexedSchedule]:
+    """Level the graph without ever leaving index space.
+
+    The sharded/million-task path: the (optionally sharded) index graph is
+    leveled by :func:`_level_array` and bucketed with one stable argsort —
+    no TaskId tuples, no per-task dicts.  Returns the graph too, since
+    executors need the id -> label blocks only if they label at all.
+    """
+    ig = graph.index_graph(params, shards=shards, parallel=parallel, pool=pool)
+    level = _level_array(ig)
+    if not ig.n:
+        return ig, IndexedSchedule(levels=[], level_of=level)
+    order = np.argsort(level, kind="stable")   # ids ascend within a level
+    bounds = np.cumsum(np.bincount(level))[:-1]
+    return ig, IndexedSchedule(levels=np.split(order, bounds), level_of=level)
 
 
 def simulate_schedule(schedule: WavefrontSchedule, workers: int = 4,
@@ -156,6 +214,36 @@ def simulate_schedule(schedule: WavefrontSchedule, workers: int = 4,
                 launch(i + 1)
 
         sim.make_ready_batch((t, done) for t in lvl)
+
+    launch(0)
+    sim.run()
+    return sim
+
+
+def simulate_indexed(schedule: IndexedSchedule, workers: int = 4,
+                     task_dur: float = 1.0) -> Sim:
+    """Execute an :class:`IndexedSchedule` level by level on the Sim.
+
+    The array twin of :func:`simulate_schedule`: each level's id array is
+    fed to the executor in one call (:meth:`Sim.make_ready_ids`) with a
+    single shared completion callback — no per-task closures or labels, so
+    the host-side cost of driving a merged million-task schedule is the
+    queue itself.  ``exec_order`` holds global task ids.
+    """
+    sim = Sim(workers, task_dur, setup_cost=0.0)
+
+    def launch(i: int) -> None:
+        if i >= len(schedule.levels):
+            return
+        lvl = schedule.levels[i]
+        state = {"remaining": int(lvl.size)}
+
+        def done() -> None:
+            state["remaining"] -= 1
+            if state["remaining"] == 0:
+                launch(i + 1)
+
+        sim.make_ready_ids(lvl, done)
 
     launch(0)
     sim.run()

@@ -80,8 +80,8 @@ def tile_domain(domain: Polyhedron, tiling: Tiling, method: str = "inflate",
 
 
 def _combined(delta: Polyhedron, src_ndim: int, gs: Tiling, gt: Tiling) -> Tiling:
-    assert delta.ndim == src_ndim + gt.ndim, \
-        f"dependence has {delta.ndim} dims != {src_ndim}+{gt.ndim}"
+    assert delta.ndim == src_ndim + gt.ndim, (
+        f"dependence has {delta.ndim} dims != {src_ndim}+{gt.ndim}")
     assert gs.ndim == src_ndim
     return Tiling(gs.sizes + gt.sizes)
 

@@ -107,8 +107,7 @@ class CountingFunction:
         coords = np.asarray(coords, dtype=np.int64)
         if coords.ndim != 2:
             # -1 is ambiguous for size-0 inputs; the fixed-dim count is known
-            coords = coords.reshape(-1, nfixed) if nfixed \
-                else coords.reshape(len(coords), 0)
+            coords = coords.reshape(-1, nfixed) if nfixed else coords.reshape(len(coords), 0)
         n = coords.shape[0]
         assert coords.shape[1] == nfixed
         if self.strategy != "enumerator":

@@ -91,6 +91,43 @@ def _row_ints(row) -> tuple[int, ...]:
     return tuple(int(c * den) for c in row)
 
 
+# ------------------------------------------------------------------ sharding
+SHARD_LO, SHARD_HI = "__slo", "__shi"
+
+
+def shard_polyhedron(poly: Polyhedron) -> Polyhedron:
+    """Expose the outermost dim's scan range as two extra parameters.
+
+    Returns the same point set constrained by ``__slo <= d0 <= __shi`` with
+    ``__slo``/``__shi`` appended to the parameter list.  A :class:`LoopNest`
+    over the result scans exactly the rows of the full lexicographic scan
+    whose outermost coordinate falls in ``[lo, hi]`` — in the same order —
+    so concatenating block scans over a partition of the outer range is
+    byte-identical to one full scan.
+
+    Every shard of one polyhedron shares this single extended polyhedron
+    (the block bounds travel as parameter *values*), so the canonical-key
+    scan cache compiles each unit once per process no matter how many
+    shards it is split into.
+    """
+    assert poly.ndim > 0, "cannot shard a 0-dim polyhedron"
+    assert SHARD_LO not in poly.param_names, "polyhedron is already sharded"
+    nd, np_ = poly.ndim, poly.nparam
+    F1 = Fraction(1)
+
+    def ext(row):
+        return row[:nd + np_] + (F0, F0) + row[-1:]
+
+    lo_row = [F0] * (nd + np_ + 3)
+    lo_row[0], lo_row[nd + np_] = F1, -F1          # d0 - __slo >= 0
+    hi_row = [F0] * (nd + np_ + 3)
+    hi_row[0], hi_row[nd + np_ + 1] = -F1, F1      # __shi - d0 >= 0
+    return Polyhedron(
+        poly.dim_names, poly.param_names + (SHARD_LO, SHARD_HI),
+        tuple(ext(r) for r in poly.ineqs) + (tuple(lo_row), tuple(hi_row)),
+        tuple(ext(r) for r in poly.eqs)).canonical()
+
+
 @dataclass
 class _Level:
     """Bounds for one loop dim: rows over [outer dims..., this dim, params, 1].
@@ -393,8 +430,8 @@ class LoopNest:
             exec(compile(src, f"<loopnest {self.poly.dim_names}>", "exec"), ns)
             return (src, ns["__scan"], ns["__count"])
 
-        self._gen_source, self._scan_fn, self._count_fn = \
-            _cache_slot(self._cache_key, "scalar", build)
+        self._gen_source, self._scan_fn, self._count_fn = _cache_slot(
+            self._cache_key, "scalar", build)
 
     def generated_source(self) -> str:
         """The generated Python loop nest (compiled backend; docs/debug)."""
@@ -550,8 +587,8 @@ class LoopNest:
             exec(compile(src, f"<loopnest-np {self.poly.dim_names}>", "exec"), ns)
             return (src, ns["__scan_np"], ns["__count_np"])
 
-        self._np_source, self._scan_np_fn, self._count_np_fn = \
-            _cache_slot(self._cache_key, "numpy", build)
+        self._np_source, self._scan_np_fn, self._count_np_fn = _cache_slot(
+            self._cache_key, "numpy", build)
 
     def generated_numpy_source(self) -> str:
         """The generated NumPy batch enumerator (docs/debug)."""
@@ -644,6 +681,34 @@ class LoopNest:
             prefix.pop()
         return total
 
+    def outer_bounds(self, params=()) -> Optional[tuple[int, int]]:
+        """Static integer bounds ``[lb, ub]`` of the outermost dim.
+
+        Level-0 bounds never reference outer dims, so they evaluate from the
+        parameters alone — this is what the shard planner partitions.  Returns
+        ``None`` when the nest is 0-dim, infeasible at these params, or the
+        outer dim is unbounded (callers fall back to a single local scan).
+        """
+        pv = self._param_vec(params)
+        if self.ndim == 0 or not self.feasible(pv):
+            return None
+        los, ups = self._int_levels[0]
+        lb: Optional[int] = None
+        ub: Optional[int] = None
+        for r in los:
+            rest = r.const + sum(c * p for c, p in zip(r.par, pv) if c)
+            v = -rest if r.a == 1 else -(rest // r.a)
+            if lb is None or v > lb:
+                lb = v
+        for r in ups:
+            rest = r.const + sum(c * p for c, p in zip(r.par, pv) if c)
+            v = rest if r.a == 1 else rest // r.a
+            if ub is None or v < ub:
+                ub = v
+        if lb is None or ub is None:
+            return None
+        return lb, ub
+
     def first(self, params=()) -> Optional[tuple[int, ...]]:
         return next(self.iterate(params), None)
 
@@ -667,8 +732,8 @@ class LoopNest:
         if isinstance(params, dict):
             return [params[n] for n in self.poly.param_names]
         pv = list(params)
-        assert len(pv) == self.nparam, \
-            f"expected {self.nparam} params {self.poly.param_names}, got {pv}"
+        assert len(pv) == self.nparam, (
+            f"expected {self.nparam} params {self.poly.param_names}, got {pv}")
         return pv
 
     # ---------------------------------------------------------------- codegen

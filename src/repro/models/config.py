@@ -138,10 +138,10 @@ class ArchConfig:
                               * (m.qk_nope_head_dim + m.v_head_dim)
                               + self.n_heads * m.v_head_dim * d)
                 else:
-                    total += d * (self.n_heads * hd) + \
-                        2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
-            if self.moe is not None and i >= self.n_dense_layers \
-                    and not is_ssm_layer:
+                    total += (d * (self.n_heads * hd)
+                              + 2 * d * (self.n_kv_heads * hd)
+                              + (self.n_heads * hd) * d)
+            if self.moe is not None and i >= self.n_dense_layers and not is_ssm_layer:
                 ff = self.moe.d_ff_expert
                 per = (3 if self.mlp == "swiglu" else 2) * d * ff
                 total += per * (self.moe.n_experts + self.moe.n_shared)

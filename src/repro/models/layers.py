@@ -126,12 +126,11 @@ def _attn_chunked(q, k, v, *, causal: bool, q_pos, kv_pos,
     for gi in range(n_groups):
         lo = gi * per
         hi = nqb if gi == n_groups - 1 else (gi + 1) * per
-        n_ch = nchunk if gi == n_groups - 1 else \
-            min(nchunk, -(-(hi * q_block) // chunk))
+        n_ch = nchunk if gi == n_groups - 1 else min(nchunk, -(-(hi * q_block) // chunk))
         q_body = make_q_body(kc[:n_ch], vc[:n_ch], pc[:n_ch])
         outs_groups.append(jax.lax.map(q_body, (qg[lo:hi], qp[lo:hi])))
-    outs = jnp.concatenate(outs_groups, axis=0) if n_groups > 1 \
-        else outs_groups[0]                    # [nqb,B,Hkv,G,q_block,Dv]
+    outs = (jnp.concatenate(outs_groups, axis=0) if n_groups > 1
+            else outs_groups[0])               # [nqb,B,Hkv,G,q_block,Dv]
     out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(
         B, Sq + qpad, Hkv * G, Dv)
     if qpad:
@@ -420,8 +419,8 @@ def moe_einsum_apply(p, x, cfg: ArchConfig):
     comb = jnp.einsum("gtke,gtk,gtkc->gtec", onehot.astype(jnp.float32),
                       gate.astype(jnp.float32), slot_oh.astype(jnp.float32))
     xe = jnp.einsum("gtd,gtec->gecd", xt, disp)             # [G,E,C,d]
-    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * \
-        jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["wu"])
     ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
     yt = jnp.einsum("gecd,gtec->gtd", ye, comb.astype(x.dtype))
     out = yt.reshape(B, S, d)
@@ -504,8 +503,8 @@ def moe_ep_apply(p, x, cfg: ArchConfig, *, ep_axis: Optional[str] = None,
     buf = jnp.zeros((e_loc * Ce + 1, d), x.dtype).at[slot2].set(recv_x[order2])
     buf = buf[:-1].reshape(e_loc, Ce, d)
 
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
-        jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wu"])
     yb = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(e_loc * Ce, d)
 
     # un-sort back to recv slot order, then all_to_all back

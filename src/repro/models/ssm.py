@@ -72,8 +72,8 @@ def _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
         # state update: carry to end of chunk
         chunk_decay = jnp.exp(cums_last := cumb[:, -1:, :])  # [B,1,H]
         w = jnp.exp(cumb[:, -1:, :] - cumb)                  # decay t..end
-        state_new = state * chunk_decay[:, 0, :, None, None] + \
-            jnp.einsum("blh,blhp,bln->bhpn", dtb * w, xb, Bb)
+        state_new = state * chunk_decay[:, 0, :, None, None] + jnp.einsum(
+            "blh,blhp,bln->bhpn", dtb * w, xb, Bb)
         return state_new, y_state + y_intra
 
     if init_state is None:
@@ -125,8 +125,8 @@ def mamba2_apply(p, x, cfg: ArchConfig, *, cache: Optional[dict] = None):
     xh = xin.reshape(B, S, nh, s.head_dim)
 
     if S == 1:                                               # recurrent decode
-        state = cache["ssm"] if cache is not None else \
-            jnp.zeros((B, nh, s.head_dim, N), jnp.float32)
+        state = (cache["ssm"] if cache is not None
+                 else jnp.zeros((B, nh, s.head_dim, N), jnp.float32))
         dA = jnp.exp(dt[:, 0] * A[None, :])                  # [B,H]
         st = state * dA[:, :, None, None] + jnp.einsum(
             "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32),
@@ -205,8 +205,7 @@ def _wkv6_scan(r, k, v, w, u, init_state=None, chunk: int = 64):
     O(S/chunk) states instead of O(S) — same structure as the Pallas kernel.
     """
     B, S, H, D = r.shape
-    state = init_state if init_state is not None else \
-        jnp.zeros((B, H, D, D), jnp.float32)
+    state = init_state if init_state is not None else jnp.zeros((B, H, D, D), jnp.float32)
     chunk = min(chunk, S)
     pad = (-S) % chunk
     if pad:
@@ -252,8 +251,7 @@ def rwkv6_time_mix(p, x, cfg: ArchConfig, *, cache: Optional[dict] = None,
     B, S, d = x.shape
     H = d // r_cfg.head_dim
     D = r_cfg.head_dim
-    last = cache["shift"] if cache is not None else \
-        jnp.zeros((B, 1, d), x.dtype)
+    last = cache["shift"] if cache is not None else jnp.zeros((B, 1, d), x.dtype)
     xs = jnp.concatenate([last, x[:, :-1]], axis=1)          # token shift
     mixed = [x + (xs - x) * p["mix_rkvwg"][i] for i in range(5)]
     r = (mixed[0] @ p["wr"]).reshape(B, S, H, D)

@@ -45,8 +45,8 @@ class ParallelCtx:
 
 def _stack(key, n: int, init_fn: Callable) -> PyTree:
     keys = jax.random.split(key, n)
-    return jax.vmap(init_fn)(keys) if False else \
-        jax.tree.map(lambda *xs: jnp.stack(xs), *[init_fn(k) for k in keys])
+    return (jax.vmap(init_fn)(keys) if False else
+            jax.tree.map(lambda *xs: jnp.stack(xs), *[init_fn(k) for k in keys]))
 
 
 def _layer_params(key, cfg: ArchConfig, dtype, moe_layer: bool):

@@ -128,8 +128,8 @@ def sequential_reference(stage_fn: Callable, stage_params: PyTree,
         h, _ = jax.lax.scan(body, x, stage_params)
         return h
 
-    return jax.vmap(apply_all)(microbatches) if False else \
-        jnp.stack([apply_all(mb) for mb in microbatches])
+    return (jax.vmap(apply_all)(microbatches) if False
+            else jnp.stack([apply_all(mb) for mb in microbatches]))
 
 
 def make_pipeline_loss(stage_fn, schedule, mesh, axis="stage"):

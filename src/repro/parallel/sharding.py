@@ -87,8 +87,7 @@ def _axis_size(mesh: Mesh, axis) -> int:
         return 1
     if isinstance(axis, tuple):
         return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
-    return mesh.shape.get(axis, 1) if isinstance(mesh.shape, dict) else \
-        mesh.shape[axis]
+    return mesh.shape.get(axis, 1) if isinstance(mesh.shape, dict) else mesh.shape[axis]
 
 
 def _fit_axis(axis, dim: int, mesh: Mesh):

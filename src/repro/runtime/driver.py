@@ -106,8 +106,7 @@ class TrainDriver:
                     params, opt_state, batch)
                 self.history.append(
                     StepResult(step, float(loss), self.restarts))
-                if (step + 1) % cfg.ckpt_every == 0 or \
-                        step == cfg.total_steps - 1:
+                if (step + 1) % cfg.ckpt_every == 0 or step == cfg.total_steps - 1:
                     ckpt.submit(step, {"params": params, "opt": opt_state})
             ok = ckpt.wait(timeout=300)
             assert ok, "checkpointer did not quiesce"

@@ -96,8 +96,7 @@ def test_table2_startup_overheads():
         assert rows[("autodec_nosrc", K)]["startup_ops"] == 1
         assert rows[("tags1", K)]["startup_ops"] == 1
     # growth: prescribed startup scales ~4x when n scales 4x
-    assert rows[("prescribed", 8)]["startup_ops"] > \
-        3 * rows[("prescribed", 4)]["startup_ops"]
+    assert rows[("prescribed", 8)]["startup_ops"] > 3 * rows[("prescribed", 4)]["startup_ops"]
 
 
 def test_table2_spatial_and_inflight():

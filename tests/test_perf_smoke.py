@@ -25,19 +25,26 @@ def test_bench_taskgen_smoke():
     from benchmarks import bench_taskgen
     lines, out = _collect(bench_taskgen.run, smoke=True)
     rows = [ln for ln in lines if ln and not ln.startswith("#")]
-    # header + one row per (smoke program, backend)
-    assert rows[0].startswith("program,backend,")
-    n_expect = len(bench_taskgen.SMOKE_SUITE) * len(bench_taskgen.BACKENDS)
+    # header + one row per (smoke program, backend) + sharded numpy rows
+    assert rows[0].startswith("program,backend,shards,")
+    per_prog = len(bench_taskgen.BACKENDS) + len(bench_taskgen.SHARD_COUNTS)
+    n_expect = len(bench_taskgen.SMOKE_SUITE) * per_prog
     assert len(rows) == 1 + n_expect
     assert any("geomean" in ln for ln in lines)
-    # stable machine-readable schema: (name, backend, tasks/sec) per row
-    assert out["schema_version"] == 1
+    # stable machine-readable schema: (name, backend, shards, tasks/sec)
+    assert out["schema_version"] == 2
     assert len(out["rows"]) == n_expect
     for r in out["rows"]:
-        assert {"program", "backend", "tasks_per_s"} <= set(r)
+        assert {"program", "backend", "shards", "tasks_per_s"} <= set(r)
         assert r["backend"] in bench_taskgen.BACKENDS
+        assert r["shards"] == 1 or r["backend"] == "numpy"
     assert json.dumps(out)  # artifact must be JSON-serializable
     assert out["geomean"]["numpy_enum_over_compiled"] > 0
+    # the smoke-scale curve ran, verified byte-identical per shard count
+    scale = out["shard_scale"]
+    assert [r["shards"] for r in scale] == list(
+        bench_taskgen.SCALE_SHARDS) * len(bench_taskgen.SMOKE_SCALE_SUITE)
+    assert all(r["n_tasks"] == scale[0]["n_tasks"] for r in scale[:3])
 
 
 def test_bench_compile_smoke():
@@ -63,11 +70,14 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 1
+    assert report["schema_version"] == 2
     assert report["smoke"] is True
+    assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
     assert sec["ok"] is True
     assert sec["data"]["rows"], "taskgen rows missing from artifact"
+    assert sec["data"]["shard_scale"], "shard-scale rows missing"
+    assert {r["shards"] for r in sec["data"]["rows"]} >= {1, 2}
 
 
 def test_compiled_not_slower_than_fraction():

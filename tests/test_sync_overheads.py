@@ -1,0 +1,111 @@
+"""Table-2 overhead asymptotics, asserted on growing graph sizes.
+
+The paper's §2 comparison is qualitative ("scales with the number of
+tasks/edges", "O(1) start-up"); these tests pin the measured counters of
+each synchronization model to those shapes on the diamond DAG (the paper's
+worst case for prescribed synchronization, Fig 1) at increasing sizes:
+
+* ``prescribed`` start-up is exactly tasks + edges (the master declares
+  everything); ``counted`` start-up is exactly tasks — both grow linearly.
+* ``autodec`` start-up stays O(1) and its master does only the
+  statically-computed root set (preschedule).
+* ``tags1`` spatial peak tracks the edge count (one-use tags); ``tags2``
+  tags are disposable only at completion, so its garbage gauge holds
+  every producer's tag at the end while every other model drains to zero.
+* ``autodec`` live counters peak at the frontier, not the graph.
+"""
+from __future__ import annotations
+
+from repro.core.edt import MODELS, TiledTaskGraph, validate_order
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+SIZES = (4, 8, 12)
+
+
+def _measurements():
+    out = []
+    for k in SIZES:
+        g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))})
+        params = {"K": k}
+        m = g.materialize(params)
+        runs = {}
+        for name, fn in MODELS.items():
+            r = fn(g, params, workers=4)
+            validate_order(g, params, r)
+            runs[name] = r.counters
+        out.append((k, len(m.tasks), m.n_edges,
+                    len(list(g.roots(params))), runs))
+    return out
+
+
+MEASURED = None
+
+
+def _runs():
+    global MEASURED
+    if MEASURED is None:
+        MEASURED = _measurements()
+    return MEASURED
+
+
+def test_prescribed_and_counted_startup_grow_with_tasks():
+    for k, n, e, _, runs in _runs():
+        assert runs["prescribed"].startup_ops == n + e
+        assert runs["counted"].startup_ops == n
+    startups = [runs["prescribed"].startup_ops for *_, runs in _runs()]
+    assert startups == sorted(startups) and startups[0] < startups[-1]
+
+
+def test_autodec_startup_is_o1_plus_roots():
+    for k, n, e, roots, runs in _runs():
+        assert runs["autodec"].startup_ops == 1      # O(1): gate never closes
+        assert runs["autodec"].master_ops == roots   # preschedule = root set
+        assert runs["autodec_nosrc"].startup_ops == 1
+        assert runs["autodec_nosrc"].master_ops == n  # w/o src: all tasks
+    # the root set, not the graph, sizes the master's work: on the
+    # embarrassing program every task is a root and the master does N ops
+    g = TiledTaskGraph(PROGRAMS["embarrassing"](), {"S": Tiling((1,))})
+    r = MODELS["autodec"](g, {"N": 23}, workers=4)
+    assert r.counters.master_ops == 23
+    assert r.counters.startup_ops == 1
+
+
+def test_tags1_spatial_peak_tracks_edges():
+    peaks = []
+    for k, n, e, _, runs in _runs():
+        peak = runs["tags1"].spatial.peak
+        # every edge becomes one one-use tag (+1 transient pending get)
+        assert e - 1 <= peak <= e + 1
+        assert runs["tags1"].spatial.total == 2 * e  # tag + pending get
+        peaks.append(peak)
+    assert peaks == sorted(peaks) and peaks[0] < peaks[-1]
+
+
+def test_counted_spatial_is_tasks_autodec_is_frontier():
+    for k, n, e, _, runs in _runs():
+        assert runs["counted"].spatial.peak == n
+        # autodec keeps only live frontier counters — far below n, and its
+        # lifetime total still covers every task exactly once
+        assert runs["autodec"].spatial.peak < n // 2
+        assert runs["autodec"].spatial.total == n
+
+
+def test_garbage_drains_to_zero_except_tags2():
+    for k, n, e, _, runs in _runs():
+        for name in ("prescribed", "tags1", "counted", "autodec",
+                     "autodec_nosrc"):
+            assert runs[name].garbage.cur == 0, name
+            assert runs[name].inflight_deps.cur == 0, name
+            assert runs[name].inflight_tasks.cur == 0, name
+        # tags2 tags are only disposable at graph completion: every task
+        # that produced a tag still holds it as garbage at the end
+        assert runs["tags2"].garbage.cur == n - 1
+
+
+def test_every_model_covered_and_validated():
+    """``validate_order`` ran for every model at every size inside
+    ``_measurements`` (exactly-once + dependence-respecting order); this
+    pins that the registry was fully covered."""
+    for *_, runs in _runs():
+        assert set(runs) == set(MODELS)

@@ -19,9 +19,9 @@ subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 2):
+diff perf artifacts across PRs.  Stable schema (version 3):
 
-    {"schema_version": 2, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 3, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
@@ -29,6 +29,13 @@ where ``data`` is the section's own return value (e.g. taskgen emits
 "geomean": ..., "shard_scale": [...]}``) when it is JSON-serializable,
 else its ``repr``.  Sharded rows record their shard count in ``shards``;
 single-process rows carry ``shards = 1``.
+
+New in v3: the ``executor`` section returns structured data instead of a
+repr — ``{"models": [...], "dispatch": [...]}`` where each ``dispatch``
+row prices driving one synthesized wavefront schedule through a host or
+device path (``path`` in {host, device_replay, device_discover}) with
+``seconds`` / ``per_task_us`` / ``verified`` fields, so the artifact
+tracks host-vs-device dispatch cost per task across PRs.
 """
 from __future__ import annotations
 
@@ -64,7 +71,7 @@ def main(argv=None) -> int:
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 2, "smoke": bool(args.smoke),
+    report = {"schema_version": 3, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)

@@ -23,6 +23,27 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
+def pallas():
+    """The ``jax.experimental.pallas`` module, or ``None`` when this jax
+    build ships without it (minimal CPU wheels, very old releases).
+
+    Callers that can fall back to plain XLA ops should do so when this
+    returns ``None`` instead of wrapping their own try/except — keeping the
+    capability check here means one place to fix when the import path moves
+    (and tests can monkeypatch this function to simulate a pallas-less jax).
+    """
+    try:
+        from jax.experimental import pallas as pl
+    except ImportError:
+        return None
+    return pl
+
+
+def has_pallas() -> bool:
+    """True when :func:`pallas` resolves — cheap capability probe."""
+    return pallas() is not None
+
+
 def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
     """``jax.shard_map(check_vma=)`` / experimental ``shard_map(check_rep=)``."""
     sm = getattr(jax, "shard_map", None)

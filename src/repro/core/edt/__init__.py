@@ -1,4 +1,6 @@
 """Event-driven task graphs: construction (§3/§4), sync models (§2), execution."""
+from .device import (DeviceCounters, DeviceExecutor, DeviceGraph, DeviceRun,
+                     DeviceSchedule, pack_graph, pack_schedule)
 from .executor import Counters, Gauge, Sim
 from .shard import ShardPlan, ShardSpec, plan_shards, scan_sharded
 from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
@@ -7,13 +9,16 @@ from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
 from .taskgraph import (Dependence, IndexedGraph, MaterializedGraph,
                         PolyhedralProgram, Statement, TaskId, TiledTaskGraph)
 from .threaded import ThreadedAutodec, run_graph_threaded
-from .wavefront import (IndexedSchedule, WavefrontSchedule, simulate_indexed,
-                        simulate_schedule, synthesize, synthesize_indexed)
+from .wavefront import (IndexedSchedule, WavefrontSchedule, levels_from_array,
+                        simulate_indexed, simulate_schedule, synthesize,
+                        synthesize_indexed)
 
 __all__ = [
     "PolyhedralProgram", "Statement", "Dependence", "TiledTaskGraph",
     "MaterializedGraph", "IndexedGraph", "TaskId",
     "ShardSpec", "ShardPlan", "plan_shards", "scan_sharded",
+    "DeviceExecutor", "DeviceRun", "DeviceCounters", "DeviceGraph",
+    "DeviceSchedule", "pack_graph", "pack_schedule",
     "Sim", "Counters", "Gauge",
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",
@@ -21,4 +26,5 @@ __all__ = [
     "ThreadedAutodec", "run_graph_threaded",
     "WavefrontSchedule", "synthesize", "simulate_schedule",
     "IndexedSchedule", "synthesize_indexed", "simulate_indexed",
+    "levels_from_array",
 ]

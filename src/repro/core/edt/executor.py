@@ -99,6 +99,11 @@ class Sim:
         self._started_any = False
         self.exec_order: list = []
         self.running = 0
+        # Exactly-once guard: every key ever enqueued.  A task made ready
+        # twice would double-start and leak counters (the class of bug the
+        # PR-4 threaded stress test caught in ThreadedAutodec); the Sim
+        # layer rejects it at enqueue time rather than mis-counting later.
+        self._enqueued: set = set()
 
     # ---------------------------------------------------------------- events
     def at(self, dt: float, fn: Callable[[], None]) -> None:
@@ -139,7 +144,16 @@ class Sim:
         self.at(0.0, lambda: step(0))
 
     # ---------------------------------------------------------------- tasks
+    def _claim(self, key) -> None:
+        """Record ``key`` as enqueued; reject a second make-ready of it."""
+        if key in self._enqueued:
+            raise ValueError(
+                f"task {key!r} was already made ready: a duplicate enqueue "
+                f"would double-start it and corrupt the overhead counters")
+        self._enqueued.add(key)
+
     def make_ready(self, key, run_fn: Callable[[], None]) -> None:
+        self._claim(key)
         self.ready.append((key, run_fn))
         self._dispatch()
 
@@ -148,9 +162,15 @@ class Sim:
 
         ``items`` is an iterable of ``(key, run_fn)`` pairs; the queue is
         extended en bloc and dispatched once — level-sized batches from the
-        wavefront scheduler don't pay a dispatch attempt per task.
+        wavefront scheduler don't pay a dispatch attempt per task.  Each
+        key must be new to this Sim (exactly-once; ``ValueError`` on a
+        duplicate, within the batch or against any earlier enqueue).
         """
-        self.ready.extend(items)
+        claim = self._claim
+        ready = self.ready
+        for key, run_fn in items:
+            claim(key)
+            ready.append((key, run_fn))
         self._dispatch()
 
     def make_ready_ids(self, ids, run_fn: Callable[[], None]) -> None:
@@ -159,9 +179,16 @@ class Sim:
         Fed straight from merged index arrays (sharded materialization /
         :class:`IndexedSchedule` levels): keys are plain ints and every
         task of the level shares ``run_fn``, so driving a million-task
-        schedule allocates no per-task closures or label tuples.
+        schedule allocates no per-task closures or label tuples.  Ids are
+        validated exactly-once like every other enqueue path
+        (``ValueError`` on a duplicate).
         """
-        self.ready.extend((int(i), run_fn) for i in ids)
+        claim = self._claim
+        ready = self.ready
+        for i in ids:
+            key = int(i)
+            claim(key)
+            ready.append((key, run_fn))
         self._dispatch()
 
     def _dispatch(self) -> None:

@@ -171,6 +171,23 @@ def _synthesize_arrays(graph: TiledTaskGraph, params: dict,
     return WavefrontSchedule(levels, level_of)
 
 
+def levels_from_array(level: "np.ndarray") -> list["np.ndarray"]:
+    """Bucket global task ids by level with one stable argsort.
+
+    ``level`` is an int array of per-task level indices (0-based, dense).
+    Returns int64 id arrays per level with ids ascending within each —
+    the exact :class:`IndexedSchedule.levels` layout.  Shared by
+    :func:`synthesize_indexed` and the device executor
+    (:mod:`repro.core.edt.device`) so both derive byte-identical frontiers
+    from a ``level_of`` array.
+    """
+    if not level.size:
+        return []
+    order = np.argsort(level, kind="stable")   # ids ascend within a level
+    bounds = np.cumsum(np.bincount(level))[:-1]
+    return np.split(order, bounds)
+
+
 def synthesize_indexed(graph: TiledTaskGraph, params: dict,
                        shards: Optional[int] = None, parallel: bool = False,
                        pool=None) -> tuple[IndexedGraph, IndexedSchedule]:
@@ -183,11 +200,7 @@ def synthesize_indexed(graph: TiledTaskGraph, params: dict,
     """
     ig = graph.index_graph(params, shards=shards, parallel=parallel, pool=pool)
     level = _level_array(ig)
-    if not ig.n:
-        return ig, IndexedSchedule(levels=[], level_of=level)
-    order = np.argsort(level, kind="stable")   # ids ascend within a level
-    bounds = np.cumsum(np.bincount(level))[:-1]
-    return ig, IndexedSchedule(levels=np.split(order, bounds), level_of=level)
+    return ig, IndexedSchedule(levels=levels_from_array(level), level_of=level)
 
 
 def simulate_schedule(schedule: WavefrontSchedule, workers: int = 4,

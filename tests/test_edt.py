@@ -185,6 +185,45 @@ def test_make_ready_batch_matches_sequential_enqueue():
     assert [i for t, i in runs if t == "a"] == [i for t, i in runs if t == "b"]
 
 
+def test_sim_rejects_duplicate_ready_ids():
+    """Exactly-once guard at the Sim layer: the counter-leak class the
+    PR-4 threaded stress test caught (a task made ready twice) must be
+    rejected at enqueue time, on every enqueue path."""
+    import numpy as np
+
+    from repro.core.edt import Sim
+
+    # duplicate inside one make_ready_ids call
+    sim = Sim(workers=2)
+    with pytest.raises(ValueError, match="already made ready"):
+        sim.make_ready_ids(np.asarray([0, 1, 1]), lambda: None)
+    # duplicate across make_ready_ids calls
+    sim = Sim(workers=2)
+    sim.make_ready_ids(np.asarray([0, 1]), lambda: None)
+    with pytest.raises(ValueError, match="already made ready"):
+        sim.make_ready_ids(np.asarray([2, 1]), lambda: None)
+    # duplicate across make_ready_batch calls and against make_ready
+    sim = Sim(workers=2)
+    sim.make_ready_batch([(("S", (0,)), lambda: None)])
+    with pytest.raises(ValueError, match="already made ready"):
+        sim.make_ready_batch([(("S", (0,)), lambda: None)])
+    sim = Sim(workers=2)
+    sim.make_ready("t0", lambda: None)
+    with pytest.raises(ValueError, match="already made ready"):
+        sim.make_ready("t0", lambda: None)
+    # mixed paths share one guard: an id enqueued via make_ready is also
+    # rejected when it reappears in a batch of ids
+    sim = Sim(workers=2)
+    sim.make_ready(3, lambda: None)
+    with pytest.raises(ValueError, match="already made ready"):
+        sim.make_ready_ids(np.asarray([3]), lambda: None)
+    # distinct keys still flow through untouched
+    sim = Sim(workers=2)
+    sim.make_ready_ids(np.asarray([0, 1, 2]), lambda: None)
+    sim.run()
+    assert sim.exec_order == [0, 1, 2]
+
+
 def test_codegen_emission():
     g = TiledTaskGraph(PROGRAMS["pipeline"](), {"S": Tiling((2, 1))})
     pres = emit_prescribed(g)

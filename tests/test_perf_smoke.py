@@ -59,7 +59,18 @@ def test_bench_sync_and_executor_smoke():
     rows = bench_sync_overheads.run(emit=lambda *a, **k: None, smoke=True)
     assert rows  # one entry per (model, size)
     out = bench_executor.run(emit=lambda *a, **k: None, smoke=True)
-    assert all(v > 0 for v in out.values())
+    assert json.dumps(out)  # v3: executor data must be JSON-serializable
+    assert len(out["models"]) == (len(bench_executor.SMOKE_CASES)
+                                  * len(bench_executor.MODELS_))
+    assert all(r["makespan"] > 0 for r in out["models"])
+    # host-vs-device dispatch rows: every path priced and cross-verified
+    paths = {r["path"] for r in out["dispatch"]}
+    assert {"host", "device_replay", "device_discover"} <= paths
+    for r in out["dispatch"]:
+        assert {"program", "path", "shards", "tasks", "edges", "depth",
+                "seconds", "per_task_us", "verified"} <= set(r)
+        assert r["verified"] is True
+        assert r["per_task_us"] > 0
 
 
 def test_run_harness_smoke_mode(tmp_path):
@@ -70,7 +81,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 2
+    assert report["schema_version"] == 3
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]

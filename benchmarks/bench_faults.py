@@ -1,0 +1,76 @@
+"""Recovery overhead: the price of self-healing sharded materialization.
+
+The robustness layer (``docs/robustness.md``) promises that a recoverable
+worker fault costs one re-scanned shard job plus backoff — not a restart
+of the whole materialization.  This benchmark prices that promise: for
+each shard count it times
+
+* the fault-free ``index_graph(shards=n)`` baseline (with the recovery
+  machinery *armed* — individual submits, wave timeouts — so the row also
+  prices the harness itself against the ``pool.map`` fast path), and
+* the same run with one injected recoverable worker crash,
+
+verifying after every run that the produced arrays are byte-identical to
+the single-process oracle.  Rows: ``{shards, fault, clean_s, faulty_s,
+overhead_ratio, verified}`` for the ``faults`` section of
+``benchmarks/run.py`` (schema v4).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.edt import (Fault, FaultPlan, RetryPolicy, TiledTaskGraph,
+                            WORKER_CRASH)
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+POLICY = RetryPolicy(max_retries=2, base_delay=0.005, timeout=30.0)
+
+
+def _identical(ig, oracle) -> bool:
+    return (ig.n == oracle.n
+            and np.array_equal(ig.edge_src, oracle.edge_src)
+            and np.array_equal(ig.edge_tgt, oracle.edge_tgt)
+            and np.array_equal(ig.pred_n, oracle.pred_n))
+
+
+def _time_run(g, params, shards, faults):
+    t0 = time.time()
+    ig = g.index_graph(params, shards=shards, faults=faults, recovery=POLICY)
+    return time.time() - t0, ig
+
+
+def run(emit=print, smoke: bool = False):
+    g = TiledTaskGraph(PROGRAMS["trisolv"](), {"S": Tiling((4, 4))},
+                       backend="numpy")
+    params = {"N": 40 if smoke else 120}
+    oracle = g.index_graph(params)
+    shard_counts = (2,) if smoke else (2, 4)
+    emit(f"# recovery overhead: trisolv N={params['N']} "
+         f"({oracle.n} tasks), one recoverable crash per faulty run")
+    emit("shards,fault,clean_s,faulty_s,overhead_ratio,verified")
+    rows = []
+    for shards in shard_counts:
+        clean_s, ig = _time_run(g, params, shards, None)
+        ok = _identical(ig, oracle)
+        plan = FaultPlan(faults=(Fault(kind=WORKER_CRASH, round=1, index=0,
+                                       times=1),))
+        faulty_s, igf = _time_run(g, params, shards, plan)
+        ok = ok and _identical(igf, oracle) and bool(plan.fired)
+        if not ok:
+            raise AssertionError(
+                f"recovered graph diverged at shards={shards}")
+        ratio = faulty_s / clean_s if clean_s > 0 else float("inf")
+        row = {"shards": shards, "fault": "worker_crash@r1",
+               "clean_s": round(clean_s, 4), "faulty_s": round(faulty_s, 4),
+               "overhead_ratio": round(ratio, 3), "verified": ok}
+        rows.append(row)
+        emit(f"{shards},{row['fault']},{row['clean_s']},{row['faulty_s']},"
+             f"{row['overhead_ratio']},{ok}")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -13,15 +13,18 @@ Sections:
   sync      — §2 Table 2: overhead counters per synchronization model
   executor  — §5.2: makespan comparison across models (+ threaded autodec)
   roofline  — §Roofline terms from the dry-run artifacts (if present)
+  faults    — recovery overhead: fault-free vs one recoverable injected
+              worker crash at 2/4 shards, recovered arrays verified
+              byte-identical (docs/robustness.md)
 
 ``--smoke`` runs a fast subset of every section (small suites, no
 subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 3):
+diff perf artifacts across PRs.  Stable schema (version 4):
 
-    {"schema_version": 3, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 4, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
@@ -36,6 +39,12 @@ row prices driving one synthesized wavefront schedule through a host or
 device path (``path`` in {host, device_replay, device_discover}) with
 ``seconds`` / ``per_task_us`` / ``verified`` fields, so the artifact
 tracks host-vs-device dispatch cost per task across PRs.
+
+New in v4: the ``faults`` section prices the robustness layer — rows
+``{shards, fault, clean_s, faulty_s, overhead_ratio, verified}`` compare
+fault-free sharded materialization against a run recovering from one
+injected worker crash (retry + backoff, byte-identity verified), so the
+artifact tracks the recovery tax across PRs.
 """
 from __future__ import annotations
 
@@ -51,15 +60,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "compile", "taskgen", "sync", "executor",
-                             "roofline"])
+                             "roofline", "faults"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset of each section (sub-minute total)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results to PATH")
     args = ap.parse_args(argv)
 
-    from . import (bench_compile, bench_executor, bench_roofline,
-                   bench_sync_overheads, bench_taskgen)
+    from . import (bench_compile, bench_executor, bench_faults,
+                   bench_roofline, bench_sync_overheads, bench_taskgen)
 
     sections = {
         "compile": bench_compile.run,
@@ -67,11 +76,12 @@ def main(argv=None) -> int:
         "sync": bench_sync_overheads.run,
         "executor": bench_executor.run,
         "roofline": bench_roofline.run,
+        "faults": bench_faults.run,
     }
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 3, "smoke": bool(args.smoke),
+    report = {"schema_version": 4, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)

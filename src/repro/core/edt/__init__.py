@@ -2,13 +2,21 @@
 from .device import (DeviceCounters, DeviceExecutor, DeviceGraph, DeviceRun,
                      DeviceSchedule, pack_graph, pack_schedule)
 from .executor import Counters, Gauge, Sim
+from .faults import (DROPPED_DECREMENT, SHM_ATTACH_FAIL, TASK_BODY_ERROR,
+                     WORKER_CRASH, WORKER_HANG, Fault, FaultPlan,
+                     InjectedTaskError)
+from .recovery import (FailureReport, ResilientRun, RetryPolicy,
+                       ScheduleValidationError, ShardRecoveryError,
+                       StallError, StallReport, TaskGroupError, Watchdog,
+                       poisoned_cone, simulate_indexed_resilient)
 from .shard import ShardPlan, ShardSpec, plan_shards, scan_sharded
 from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
                          run_counted, run_model, run_prescribed, run_tags1,
                          run_tags2, validate_order)
 from .taskgraph import (Dependence, IndexedGraph, MaterializedGraph,
                         PolyhedralProgram, Statement, TaskId, TiledTaskGraph)
-from .threaded import ThreadedAutodec, run_graph_threaded
+from .threaded import (ThreadedAutodec, ThreadedRunResult, run_graph_threaded,
+                       run_graph_threaded_resilient)
 from .wavefront import (IndexedSchedule, WavefrontSchedule, levels_from_array,
                         simulate_indexed, simulate_schedule, synthesize,
                         synthesize_indexed)
@@ -23,7 +31,14 @@ __all__ = [
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",
     "run_autodec", "run_autodec_nosrc",
-    "ThreadedAutodec", "run_graph_threaded",
+    "ThreadedAutodec", "run_graph_threaded", "run_graph_threaded_resilient",
+    "ThreadedRunResult",
+    "Fault", "FaultPlan", "InjectedTaskError",
+    "WORKER_CRASH", "WORKER_HANG", "SHM_ATTACH_FAIL", "TASK_BODY_ERROR",
+    "DROPPED_DECREMENT",
+    "RetryPolicy", "FailureReport", "StallReport", "StallError",
+    "ShardRecoveryError", "TaskGroupError", "ScheduleValidationError",
+    "Watchdog", "poisoned_cone", "simulate_indexed_resilient", "ResilientRun",
     "WavefrontSchedule", "synthesize", "simulate_schedule",
     "IndexedSchedule", "synthesize_indexed", "simulate_indexed",
     "levels_from_array",

@@ -49,6 +49,8 @@ from typing import Optional, Union
 
 import numpy as np
 
+from .faults import DROPPED_DECREMENT, FaultPlan
+from .recovery import ScheduleValidationError, StallError, StallReport
 from .taskgraph import IndexedGraph, TiledTaskGraph
 from .wavefront import IndexedSchedule, levels_from_array
 
@@ -254,6 +256,51 @@ def make_pallas_step(n: int, n_edges: int, interpret: Optional[bool] = None):
     return step
 
 
+# ---------------------------------------------------------------- diagnosis
+def _diagnose_replay(dg: DeviceGraph, ds: DeviceSchedule):
+    """Host-side replay of the on-device validation, naming the offenders.
+
+    The device sweep accumulates violation *counts* (cheap scalars inside
+    the XLA loop); when any is nonzero this NumPy twin re-walks the levels
+    with the identical check order — (a) level tasks not ready, (b) next
+    level ready early, (c) end-of-sweep undrained counters — and returns
+    ``(kind, level, offending task ids, counter state)`` for the first
+    violation, so the raised error carries evidence, not just totals.
+    """
+    indeg = dg.pred_n.astype(np.int64).copy()
+    indptr = dg.indptr.astype(np.int64)
+    succ = dg.succ.astype(np.int64)
+    for level, ids in enumerate(ds.levels):
+        bad = ids[indeg[ids] != 0]
+        if bad.size:
+            return "not-ready", level, bad, indeg
+        if level + 1 < ds.depth:
+            nxt = ds.levels[level + 1]
+            early = nxt[indeg[nxt] == 0]
+            if early.size:
+                return "early-ready", level + 1, early, indeg
+        starts = indptr[ids]
+        counts = indptr[ids + 1] - starts
+        tot = int(counts.sum())
+        if tot:
+            csum = np.cumsum(counts)
+            eidx = (np.repeat(starts - (csum - counts), counts)
+                    + np.arange(tot, dtype=np.int64))
+            np.subtract.at(indeg, succ[eidx], 1)
+    und = np.flatnonzero(indeg != 0)
+    return "undrained", ds.depth, und, indeg
+
+
+def _counter_summary(indeg: "np.ndarray") -> dict:
+    und = np.flatnonzero(indeg != 0)
+    return {
+        "tasks": int(indeg.shape[0]),
+        "undrained": int(und.size),
+        "undrained_ids": und[:32].tolist(),
+        "max_residual": int(indeg[und].max()) if und.size else 0,
+    }
+
+
 # ----------------------------------------------------------------- counters
 @dataclass
 class DeviceCounters:
@@ -333,7 +380,8 @@ class DeviceExecutor:
                  schedule: Optional[IndexedSchedule] = None,
                  shards: Optional[int] = None, parallel: bool = False,
                  pool=None, use_pallas: bool = False,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 faults: Optional[FaultPlan] = None):
         if isinstance(graph, TiledTaskGraph):
             if params is None:
                 raise TypeError("params required with a TiledTaskGraph")
@@ -341,6 +389,7 @@ class DeviceExecutor:
                                    pool=pool)
         else:
             ig = graph
+        self.faults = faults
         if use_pallas and schedule is not None:
             raise TypeError(
                 "use_pallas applies to the discover sweep only; the replay "
@@ -393,16 +442,42 @@ class DeviceExecutor:
 
             self._discover_fn = jax.jit(
                 lambda s: jax.lax.while_loop(cond, body, s))
-        pred = jnp.asarray(dg.pred_n)
+        pred_host = dg.pred_n
+        if self.faults is not None:
+            # DROPPED_DECREMENT: the counter is initialized one too high,
+            # so the matching signal "never arrives" — the exact state a
+            # lost decrement leaves behind in the counted model
+            dropped = [int(t) for t in self.faults.dropped_tasks()]
+            if dropped:
+                pred_host = pred_host.copy()
+                for t in dropped:
+                    pred_host[t] += 1
+                    self.faults.record(DROPPED_DECREMENT, t, 0)
+        pred = jnp.asarray(pred_host)
         init = (pred, pred == 0, jnp.int32(0),
                 jnp.full(n, -1, jnp.int32), jnp.int32(0), jnp.int32(0))
         out = self._discover_fn(init)
-        _, _, depth, level_of, started, maxw = (np.asarray(x) for x in out)
+        indeg, _, depth, level_of, started, maxw = (np.asarray(x) for x in out)
         started = int(started)
         if started != n:
-            raise RuntimeError(
+            # the frontier emptied with counters undrained: a cycle or a
+            # dropped decrement.  Not an infinite hang — the sweep reached
+            # a fixpoint — so diagnose it: the undrained counters name
+            # exactly the tasks whose signals never arrived.
+            und = np.flatnonzero(indeg != 0)
+            report = StallReport(
+                context="device-discover", elapsed=0.0,
+                started=started, finished=started,
+                in_flight=0,
+                undrained={int(t): int(indeg[t]) for t in und[:1024]},
+                note=("counted-sync sweep reached a fixpoint with "
+                      f"{und.size} counter(s) undrained — the task graph "
+                      "has a cycle or a decrement was dropped"))
+            raise StallError(report, msg=(
                 f"counted-sync sweep deadlocked: {started}/{n} tasks became "
-                f"ready — the task graph has a cycle")
+                f"ready — the task graph has a cycle or a decrement was "
+                f"dropped; undrained: {und[:8].tolist()}"
+                + (f" (+{und.size - 8} more)" if und.size > 8 else "")))
         level_of = level_of.astype(np.int64)
         levels = levels_from_array(level_of)
         widths = np.asarray([lv.size for lv in levels], dtype=np.int64)
@@ -465,11 +540,13 @@ class DeviceExecutor:
         not_ready, early, undrained, maxw = (
             int(x) for x in self._replay_fn(indeg0))
         if not_ready or early or undrained:
-            raise RuntimeError(
-                "schedule is not the counted-sync execution of this graph: "
-                f"{not_ready} task(s) started before their counter drained, "
-                f"{early} became ready before their level's predecessor "
-                f"wavefront, {undrained} counter(s) left undrained")
+            # the device counted the violations; re-derive the offenders
+            # host-side so the error carries evidence, not just totals
+            kind, level, ids, indeg = _diagnose_replay(dg, ds)
+            counters = _counter_summary(indeg)
+            counters.update(device_not_ready=not_ready, device_early=early,
+                            device_undrained=undrained)
+            raise ScheduleValidationError(kind, level, ids, counters)
         widths = np.asarray([lv.size for lv in ds.levels], dtype=np.int64)
         counters = DeviceCounters(n, n, int(maxw), depth, widths)
         return DeviceRun("replay", ds.levels, ds.level_of, counters)

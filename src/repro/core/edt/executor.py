@@ -26,7 +26,7 @@ import heapq
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Optional
 
 
 class Gauge:
@@ -83,10 +83,18 @@ class Sim:
     """
 
     def __init__(self, workers: int = 4, task_dur: float = 1.0,
-                 setup_cost: float = 0.01):
+                 setup_cost: float = 0.01,
+                 on_task_error: Optional[Callable] = None):
         self.workers = workers
         self.task_dur = task_dur
         self.setup_cost = setup_cost
+        # Robustness hook: with on_task_error set, a run_fn exception is
+        # caught at completion time — recorded in task_errors and reported
+        # to the callback — instead of unwinding through run() and leaving
+        # the event heap mid-dispatch (a wedged simulator).  The failed
+        # task's worker slot is freed either way.
+        self.on_task_error = on_task_error
+        self.task_errors: list = []
         self.now = 0.0
         self._heap: list = []
         self._seq = itertools.count()
@@ -201,10 +209,24 @@ class Sim:
             self.exec_order.append(key)
             self._started_any = True
 
-            def complete(run_fn=run_fn) -> None:
-                run_fn()
-                self.free += 1
-                self.running -= 1
+            def complete(key=key, run_fn=run_fn) -> None:
+                try:
+                    run_fn()
+                except BaseException as e:  # noqa: BLE001 — see __init__
+                    if self.on_task_error is None:
+                        raise
+                    self.task_errors.append((key, e))
+                    self.on_task_error(key, e)
+                finally:
+                    self.free += 1
+                    self.running -= 1
                 self._dispatch()
 
             self.at(self.task_dur, complete)
+
+    # ------------------------------------------------------------- progress
+    def progress(self) -> tuple[int, int]:
+        """Monotone ``(started, finished)`` counters for a stall watchdog
+        (:class:`~repro.core.edt.recovery.Watchdog`)."""
+        started = len(self.exec_order)
+        return started, started - self.running

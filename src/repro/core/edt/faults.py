@@ -1,0 +1,204 @@
+"""Deterministic fault injection for the EDT pipeline.
+
+The counted-sync model lives and dies by its invariants — every counter
+drained exactly once, every sync object collected — and those invariants
+only mean something if the pipeline survives their violation *visibly*:
+a dead pool worker must not corrupt a merged graph, a dropped decrement
+must surface as a diagnosable stall instead of an infinite hang, and a
+task-body exception must poison exactly its dependent cone.
+
+This module is the *injection* half of that story (``recovery.py`` is the
+response half).  A :class:`FaultPlan` is a seeded, picklable description of
+which faults fire where:
+
+=====================  =====================================================
+kind                   meaning / injection site
+=====================  =====================================================
+``WORKER_CRASH``       a shard job dies mid-round — raised in the worker
+                       (``hard=True`` kills the whole process with
+                       ``os._exit``, breaking the pool)
+``WORKER_HANG``        a shard job sleeps past the round timeout
+``SHM_ATTACH_FAIL``    a worker fails to attach its shared-memory slot
+``TASK_BODY_ERROR``    a task body raises at task ``t`` (threaded / Sim)
+``DROPPED_DECREMENT``  one predecessor signal of task ``t`` never arrives
+                       (threaded successors / device counter init)
+=====================  =====================================================
+
+Shard faults address a pool round (0 = counts, 1 = tiles, 2 = edges) and a
+job index within it; ``times`` bounds how many successive *attempts* fail,
+so ``times <= RetryPolicy.max_retries`` makes a fault recoverable by
+construction.  The plan records every fire in ``fired`` (driver side), so
+tests can assert a fault actually triggered rather than silently missing
+its target.
+
+Injection is explicit and zero-cost when absent: every hook site takes
+``Optional[FaultPlan]`` (or a per-job ``Optional[Fault]``) and the
+fault-free fast paths are unchanged.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+WORKER_CRASH = "worker_crash"
+WORKER_HANG = "worker_hang"
+SHM_ATTACH_FAIL = "shm_attach_fail"
+TASK_BODY_ERROR = "task_body_error"
+DROPPED_DECREMENT = "dropped_decrement"
+
+SHARD_KINDS = (WORKER_CRASH, WORKER_HANG, SHM_ATTACH_FAIL)
+KINDS = SHARD_KINDS + (TASK_BODY_ERROR, DROPPED_DECREMENT)
+
+
+class InjectedWorkerCrash(RuntimeError):
+    """A shard worker died mid-round (soft injection)."""
+
+
+class InjectedAttachFailure(OSError):
+    """A shard worker could not attach its shared-memory segment."""
+
+
+class InjectedTaskError(RuntimeError):
+    """A task body raised (the injected fault of ``TASK_BODY_ERROR``)."""
+
+    def __init__(self, task):
+        super().__init__(f"injected task-body fault at task {task!r}")
+        self.task = task
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One injected fault — picklable, addressed by site.
+
+    ``round``/``index`` address shard faults (pool round × job index);
+    ``task`` addresses task-level faults (a TaskId or a global task id).
+    ``times`` is the number of successive attempts that fail: a retrying
+    driver recovers iff ``times <= max_retries``.  ``delay`` is the hang
+    duration; ``hard`` upgrades a crash to ``os._exit`` (kills the worker
+    process, breaking every in-flight job of the pool).
+    """
+
+    kind: str
+    round: int = -1
+    index: int = 0
+    task: object = None
+    times: int = 1
+    delay: float = 0.5
+    hard: bool = False
+
+
+def maybe_inject(fault: Optional[Fault], attempt: int) -> None:
+    """Fire ``fault`` if this attempt is within its ``times`` budget.
+
+    Runs *inside* the worker (shard jobs) or the task body wrapper.  A
+    crash raises (or kills the process when ``hard``), a hang sleeps past
+    the driver's round timeout, an attach failure raises ``OSError`` — the
+    driver treats all three identically: the shard failed, retry it.
+    """
+    if fault is None or attempt >= fault.times:
+        return
+    if fault.kind == WORKER_CRASH:
+        if fault.hard:
+            os._exit(1)
+        raise InjectedWorkerCrash(
+            f"injected worker crash (round {fault.round}, job {fault.index}, "
+            f"attempt {attempt})")
+    if fault.kind == WORKER_HANG:
+        time.sleep(fault.delay)
+    elif fault.kind == SHM_ATTACH_FAIL:
+        raise InjectedAttachFailure(
+            f"injected shm attach failure (round {fault.round}, "
+            f"job {fault.index}, attempt {attempt})")
+
+
+@dataclass
+class FaultPlan:
+    """A seeded set of faults plus a driver-side log of what fired.
+
+    Accessors are cheap enough to sit on hot paths guarded by
+    ``plan is not None``.  ``fired`` is appended to by the recovery layer
+    (one entry per observed failure/injection), so a test can assert both
+    that recovery succeeded *and* that the fault it planted actually went
+    off.
+    """
+
+    faults: tuple = ()
+    seed: Optional[int] = None
+    fired: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.faults = tuple(self.faults)
+
+    # ------------------------------------------------------------ accessors
+    def shard_fault(self, round_no: int, index: int) -> Optional[Fault]:
+        for f in self.faults:
+            if f.kind in SHARD_KINDS and f.round == round_no and f.index == index:
+                return f
+        return None
+
+    def body_fault(self, task) -> Optional[Fault]:
+        for f in self.faults:
+            if f.kind == TASK_BODY_ERROR and f.task == task:
+                return f
+        return None
+
+    def hang_fault(self, task) -> Optional[Fault]:
+        for f in self.faults:
+            if f.kind == WORKER_HANG and f.task == task:
+                return f
+        return None
+
+    def dropped_tasks(self) -> list:
+        return [f.task for f in self.faults if f.kind == DROPPED_DECREMENT]
+
+    def shard_kinds(self) -> list:
+        return [f for f in self.faults if f.kind in SHARD_KINDS]
+
+    def record(self, kind: str, where, attempt: int, error=None) -> None:
+        self.fired.append((kind, where, attempt, repr(error) if error else None))
+
+    # ------------------------------------------------------- recoverability
+    def recoverable(self, max_retries: int) -> bool:
+        """Whether a retrying sharded run must end byte-identical.
+
+        Shard faults recover iff every one exhausts within the retry
+        budget.  Task-level faults are never "recovered" — they quarantine
+        or stall by design — so a plan containing them is judged on its
+        shard faults only.
+        """
+        return all(f.times <= max_retries for f in self.shard_kinds())
+
+    # ------------------------------------------------------------- factory
+    @classmethod
+    def random(cls, seed: int, n_jobs: int = 4, tasks=(),
+               kinds=SHARD_KINDS, max_times: int = 3,
+               n_faults: int = 1) -> "FaultPlan":
+        """A seeded random plan — the fuzzing entry point.
+
+        ``n_jobs`` bounds the shard job index, ``tasks`` supplies the task
+        universe for task-level kinds, ``max_times`` bounds the attempt
+        budget (so recoverability is decided by the caller's retry policy,
+        not the generator).
+        """
+        rng = random.Random(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = rng.choice(tuple(kinds))
+            if kind in SHARD_KINDS:
+                faults.append(Fault(
+                    kind=kind,
+                    round=rng.randrange(3),
+                    index=rng.randrange(max(1, n_jobs)),
+                    times=rng.randint(1, max_times),
+                    delay=0.3,
+                    hard=(kind == WORKER_CRASH and rng.random() < 0.25)))
+            else:
+                if not len(tasks):
+                    continue
+                faults.append(Fault(
+                    kind=kind, task=tasks[rng.randrange(len(tasks))]))
+        return cls(faults=tuple(faults), seed=seed)

@@ -52,6 +52,7 @@ Entry points:
 from __future__ import annotations
 
 import os
+import weakref
 from concurrent.futures import Executor, ProcessPoolExecutor
 from dataclasses import dataclass, field
 from typing import Optional
@@ -59,6 +60,8 @@ from typing import Optional
 import numpy as np
 
 from ..poly.scanning import LoopNest, shard_polyhedron
+from .faults import FaultPlan, maybe_inject
+from .recovery import RetryPolicy, run_round
 
 TILES = "tiles"
 EDGES = "edges"
@@ -279,6 +282,29 @@ def _scan_edge_shard(job: _EdgeJob):
     return job.spec.key, job.spec.seq, _deposit(job.slot, rows)
 
 
+# Payload entries: every pool round ships ``(job, fault, attempt)`` tuples
+# so an injected fault (crash / hang / attach failure) fires *inside* the
+# worker before the scan runs — the driver's recovery loop sees exactly
+# what a real worker death looks like.  Fault-free runs pass fault=None and
+# pay one tuple unpack.
+def _job_count(payload) -> int:
+    job, fault, attempt = payload
+    maybe_inject(fault, attempt)
+    return _count_shard(job)
+
+
+def _job_tile(payload):
+    job, fault, attempt = payload
+    maybe_inject(fault, attempt)
+    return _scan_tile_shard(job)
+
+
+def _job_edge(payload):
+    job, fault, attempt = payload
+    maybe_inject(fault, attempt)
+    return _scan_edge_shard(job)
+
+
 # ----------------------------------------------------------------- planning
 def _unit_plan(plan: ShardPlan, kind: str, key, nest: LoopNest,
                pv: list, shards: int, oversubscribe: int) -> None:
@@ -364,18 +390,56 @@ class _ShmArray(np.ndarray):
             self._shm = getattr(obj, "_shm", None)
 
 
+def _release_segments(segs: dict, aux: list) -> None:
+    """Unlink every segment still tracked (idempotent, container-driven).
+
+    Module-level so a ``weakref.finalize`` can run it without keeping the
+    :class:`_Segments` instance alive: the containers are shared with the
+    instance, so whatever ``wrap()`` already handed off is gone from them
+    and everything else — including segments stranded by a crashed pool
+    round or an exception that skipped the normal cleanup — is unlinked
+    here.  ``weakref.finalize`` registers itself atexit, so ``/dev/shm``
+    is swept even when the driver is torn down mid-run.
+    """
+    for shm, _ in segs.values():
+        try:
+            shm.unlink()
+        except FileNotFoundError:
+            pass
+        try:
+            shm.close()
+        except BufferError:
+            pass
+    segs.clear()
+    for shm in aux:
+        try:
+            shm.unlink()
+        except FileNotFoundError:
+            pass
+        try:
+            shm.close()
+        except BufferError:
+            pass
+    aux.clear()
+
+
 class _Segments:
     """Shared-memory segments: create, hand out slots, wrap, unlink.
 
     Result segments become :class:`_ShmArray` views that own their mapping;
     auxiliary segments (statement key tables) stay owned by the driver and
-    are released when the run finishes.
+    are released when the run finishes.  A ``weakref.finalize`` guarantees
+    the release even when the run dies before reaching it (worker crash
+    unwinding past the caller, driver exit): segments are tracked in
+    shared containers the finalizer sweeps, so ``/dev/shm`` never leaks.
     """
 
     def __init__(self, enabled: bool):
         self.enabled = enabled
         self._segs: dict = {}       # unit key -> (shm, shape)
         self._aux: list = []        # driver-owned segments (key tables)
+        self._finalizer = weakref.finalize(
+            self, _release_segments, self._segs, self._aux)
 
     def _new(self, nbytes: int):
         if not self.enabled or nbytes <= 0:
@@ -423,22 +487,8 @@ class _Segments:
         return arr
 
     def release(self) -> None:
-        for shm, _ in self._segs.values():
-            try:
-                shm.unlink()
-            except FileNotFoundError:
-                pass
-        self._segs.clear()
-        for shm in self._aux:
-            try:
-                shm.unlink()
-            except FileNotFoundError:
-                pass
-            try:
-                shm.close()
-            except BufferError:
-                pass
-        self._aux.clear()
+        if self._finalizer.alive:
+            self._finalizer()   # runs _release_segments exactly once
 
 
 def _stmt_maps(graph, tiles: dict, segs: _Segments) -> dict:
@@ -496,7 +546,9 @@ def _merge_pickled(parts: dict) -> dict:
 def scan_sharded(graph, params: dict, shards: int,
                  pool: Optional[Executor] = None,
                  oversubscribe: int = OVERSUBSCRIBE,
-                 use_shm: bool = True) -> ShardedScans:
+                 use_shm: bool = True,
+                 faults: Optional[FaultPlan] = None,
+                 recovery: Optional[RetryPolicy] = None) -> ShardedScans:
     """Fan all materialization scans of ``graph`` out across processes.
 
     Round 0 counts every block exactly (and warms worker nest caches);
@@ -512,14 +564,28 @@ def scan_sharded(graph, params: dict, shards: int,
     ``pool`` lets callers amortize one ``ProcessPoolExecutor`` over many
     calls (benchmarks, services); by default a pool of ``min(shards,
     cpu_count)`` workers is spawned and torn down per call.
+
+    ``recovery`` (a :class:`~repro.core.edt.recovery.RetryPolicy`) arms
+    per-round timeouts, dead-worker detection, and bounded backoff retry:
+    a failed block is re-materialized from its :class:`ShardSpec` — scans
+    are pure, so the recovered result is byte-identical to the fault-free
+    run by construction.  A broken pool is rebuilt when this call owns it.
+    ``faults`` injects a seeded :class:`~repro.core.edt.faults.FaultPlan`
+    (crash / hang / shm-attach failure per round × job) for testing the
+    recovery path; exhausted retries raise
+    :class:`~repro.core.edt.recovery.ShardRecoveryError`, never return a
+    partial graph, and never leak a ``/dev/shm`` segment.
     """
     plan = plan_shards(graph, params, shards, oversubscribe)
     scans = ShardedScans()
     segs = _Segments(enabled=use_shm)
     own = pool is None and bool(plan.tile_specs or plan.edge_specs)
+    n_workers = max(1, min(shards, os.cpu_count() or 1))
+    factory = ((lambda: ProcessPoolExecutor(max_workers=n_workers))
+               if own else None)
     if own:
-        pool = ProcessPoolExecutor(
-            max_workers=max(1, min(shards, os.cpu_count() or 1)))
+        pool = factory()
+    rr = dict(policy=recovery, plan=faults, pool_factory=factory)
     try:
         # ---- round 0: exact block counts (parallel; warms worker nests)
         counts: dict = {}
@@ -530,7 +596,8 @@ def scan_sharded(graph, params: dict, shards: int,
                 diag = (_diag_shard_poly(graph, s.key)
                         if td.dep.src == td.dep.tgt else None)
                 jobs.append(_CountJob(s, diag))
-            for job, n in zip(jobs, pool.map(_count_shard, jobs)):
+            res, pool = run_round(_job_count, jobs, pool, round_no=0, **rr)
+            for job, n in zip(jobs, res):
                 counts[job.spec] = n
 
         # ---- round 1: tiles
@@ -559,7 +626,8 @@ def scan_sharded(graph, params: dict, shards: int,
                     _TileJob(spec=s, slot=_Slot(None, (), 0, -1))
                     for s in specs)
         if tile_jobs:
-            _gather(pool.map(_scan_tile_shard, tile_jobs), tile_parts)
+            res, pool = run_round(_job_tile, tile_jobs, pool, round_no=1, **rr)
+            _gather(res, tile_parts)
         for key, arr in _merge_pickled(tile_parts).items():
             scans.tiles[key] = arr
         for key in list(tile_parts):
@@ -610,7 +678,9 @@ def scan_sharded(graph, params: dict, shards: int,
                     if use:
                         off += counts[s]
             if edge_jobs:
-                _gather(pool.map(_scan_edge_shard, edge_jobs), edge_parts)
+                res, pool = run_round(_job_edge, edge_jobs, pool,
+                                      round_no=2, **rr)
+                _gather(res, edge_parts)
             for key, res in _merge_pickled(edge_parts).items():
                 (scans.edges_idx if isinstance(res, tuple)
                  else scans.edges_raw)[key] = res

@@ -554,13 +554,14 @@ class TiledTaskGraph:
         return int(shards or 0)
 
     def _sharded_scans(self, params: dict[str, int], shards: int,
-                       pool=None) -> dict:
+                       pool=None, faults=None, recovery=None) -> dict:
         from .shard import scan_sharded  # local import: avoid cycle
-        return scan_sharded(self, params, shards, pool=pool)
+        return scan_sharded(self, params, shards, pool=pool,
+                            faults=faults, recovery=recovery)
 
     def index_graph(self, params: dict[str, int],
                     shards: Optional[int] = None, parallel: bool = False,
-                    pool=None) -> "IndexedGraph":
+                    pool=None, faults=None, recovery=None) -> "IndexedGraph":
         """The whole task graph as flat index arrays (no per-task tuples).
 
         The numpy backend's native graph product: tasks are global integer
@@ -573,11 +574,16 @@ class TiledTaskGraph:
         ``shards=n`` (or ``parallel=True``) fans the tile/edge scans out
         across processes (see :mod:`.shard`) and merges the per-shard index
         arrays — byte-identical output, any backend.  ``pool`` reuses an
-        existing ``ProcessPoolExecutor`` across calls.
+        existing ``ProcessPoolExecutor`` across calls.  ``recovery=``
+        (a :class:`~repro.core.edt.recovery.RetryPolicy`) arms shard retry
+        with backoff; ``faults=`` injects a seeded
+        :class:`~repro.core.edt.faults.FaultPlan` (see
+        ``docs/robustness.md``).
         """
         pv = self._pv(params)
         n_shards = self._resolve_shards(shards, parallel)
-        scans = (self._sharded_scans(params, n_shards, pool=pool)
+        scans = (self._sharded_scans(params, n_shards, pool=pool,
+                                     faults=faults, recovery=recovery)
                  if n_shards > 1 else None)
         info = self._stmt_index(
             pv, with_tasks=False,
@@ -603,7 +609,8 @@ class TiledTaskGraph:
     # ------------------------------------------------------------ materialize
     def materialize(self, params: dict[str, int],
                     shards: Optional[int] = None, parallel: bool = False,
-                    pool=None) -> "MaterializedGraph":
+                    pool=None, faults=None,
+                    recovery=None) -> "MaterializedGraph":
         """Explicit adjacency (for tests / the prescribed model / wavefronts).
 
         Batched: the parameter vector, compiled scan functions, and
@@ -624,7 +631,9 @@ class TiledTaskGraph:
         n_shards = self._resolve_shards(shards, parallel)
         if n_shards > 1:
             return self._materialize_numpy(
-                pv, scans=self._sharded_scans(params, n_shards, pool=pool))
+                pv, scans=self._sharded_scans(params, n_shards, pool=pool,
+                                              faults=faults,
+                                              recovery=recovery))
         if self.backend == "numpy":
             return self._materialize_numpy(pv)
         tasks: list[TaskId] = []

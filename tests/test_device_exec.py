@@ -143,14 +143,23 @@ def _two_task_cycle() -> IndexedGraph:
 
 
 def test_discover_detects_cycle():
-    with pytest.raises(RuntimeError, match="cycle"):
+    """Still a RuntimeError matching "cycle" (back-compat), but now a
+    StallError carrying the structured report with the starved counters."""
+    from repro.core.edt import StallError
+    with pytest.raises(RuntimeError, match="cycle") as ei:
         DeviceExecutor(_two_task_cycle()).run()
+    assert isinstance(ei.value, StallError)
+    rep = ei.value.report
+    assert rep.context == "device-discover"
+    assert rep.started == 0 and set(rep.undrained) == {0, 1}
 
 
 def test_replay_rejects_non_counted_schedule():
     """A schedule that is topologically valid but not the earliest-start
     counted execution (a task delayed past its frontier) must be flagged
-    by the on-device validation."""
+    by the on-device validation — with the offending level and task ids
+    named in the structured payload."""
+    from repro.core.edt import ScheduleValidationError
     g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))},
                        backend="numpy")
     ig, sched = synthesize_indexed(g, {"K": 6})
@@ -158,11 +167,22 @@ def test_replay_rejects_non_counted_schedule():
     moved = sched.levels[1][0]
     lv[moved] += 2                      # push one task two levels late
     bad = IndexedSchedule(levels=levels_from_array(lv), level_of=lv)
-    with pytest.raises(RuntimeError, match="counted-sync"):
+    with pytest.raises(RuntimeError, match="counted-sync") as ei:
         DeviceExecutor(ig, schedule=bad).run()
+    e = ei.value
+    assert isinstance(e, ScheduleValidationError)
+    # the delayed task never decremented its successors, so the schedule
+    # runs them not-ready one level after the delay
+    assert e.kind == "not-ready"
+    assert e.level == 2
+    succ = ig.edge_tgt[ig.edge_src == int(moved)]
+    assert set(e.task_ids) == set(int(s) for s in succ)
+    assert e.counters["tasks"] == ig.n
+    assert e.counters["device_not_ready"] == len(succ)
 
 
 def test_replay_rejects_swapped_levels():
+    from repro.core.edt import ScheduleValidationError
     g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))},
                        backend="numpy")
     ig, sched = synthesize_indexed(g, {"K": 6})
@@ -170,8 +190,14 @@ def test_replay_rejects_swapped_levels():
     a, b = sched.levels[1][0], sched.levels[3][0]
     lv[a], lv[b] = lv[b], lv[a]         # order violation across levels
     bad = IndexedSchedule(levels=levels_from_array(lv), level_of=lv)
-    with pytest.raises(RuntimeError, match="counted-sync"):
+    with pytest.raises(RuntimeError, match="counted-sync") as ei:
         DeviceExecutor(ig, schedule=bad).run()
+    e = ei.value
+    # the late-level task scheduled early has an undrained counter there
+    assert isinstance(e, ScheduleValidationError)
+    assert e.kind == "not-ready"
+    assert e.level == 1
+    assert int(b) in e.task_ids
 
 
 def test_pack_schedule_rejects_duplicate_ids():

@@ -81,7 +81,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 3
+    assert report["schema_version"] == 4
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
@@ -89,6 +89,20 @@ def test_run_harness_smoke_mode(tmp_path):
     assert sec["data"]["rows"], "taskgen rows missing from artifact"
     assert sec["data"]["shard_scale"], "shard-scale rows missing"
     assert {r["shards"] for r in sec["data"]["rows"]} >= {1, 2}
+
+
+def test_faults_section_smoke():
+    """The schema-v4 recovery-overhead section: rows verified, faults
+    actually fired, artifact JSON-serializable (docs/robustness.md)."""
+    from benchmarks import bench_faults
+    lines, out = _collect(bench_faults.run, smoke=True)
+    assert any(ln.startswith("shards,fault,") for ln in lines)
+    assert out["rows"], "faults rows missing"
+    for r in out["rows"]:
+        assert {"shards", "fault", "clean_s", "faulty_s",
+                "overhead_ratio", "verified"} <= set(r)
+        assert r["verified"] is True
+    assert json.dumps(out)
 
 
 def test_compiled_not_slower_than_fraction():

@@ -36,7 +36,7 @@ from concurrent.futures import ProcessPoolExecutor
 
 import numpy as np
 
-from repro.core.edt import (DeviceExecutor, TiledTaskGraph,
+from repro.core.edt import (DeviceExecutor, ExecutionConfig, TiledTaskGraph,
                             run_graph_threaded, run_model, simulate_indexed,
                             synthesize_indexed)
 from repro.core.poly import Tiling
@@ -118,9 +118,8 @@ def _dispatch(emit, cases, pool=None):
         g = TiledTaskGraph(PROGRAMS[name](), {"S": Tiling(tiles)},
                            backend="numpy")
         t0 = time.perf_counter()
-        ig, sched = synthesize_indexed(g, params,
-                                       shards=shards if shards > 1 else None,
-                                       pool=pool)
+        ig, sched = synthesize_indexed(g, params, config=ExecutionConfig(
+            shards=shards if shards > 1 else None, pool=pool))
         emit(f"# {name}: generation+leveling {time.perf_counter()-t0:.2f}s "
              f"({ig.n} tasks, {ig.n_edges} edges, depth {sched.depth})")
 

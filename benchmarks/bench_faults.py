@@ -5,7 +5,7 @@ worker fault costs one re-scanned shard job plus backoff — not a restart
 of the whole materialization.  This benchmark prices that promise: for
 each shard count it times
 
-* the fault-free ``index_graph(shards=n)`` baseline (with the recovery
+* the fault-free sharded ``index_graph`` baseline (with the recovery
   machinery *armed* — individual submits, wave timeouts — so the row also
   prices the harness itself against the ``pool.map`` fast path), and
 * the same run with one injected recoverable worker crash,
@@ -21,8 +21,8 @@ import time
 
 import numpy as np
 
-from repro.core.edt import (Fault, FaultPlan, RetryPolicy, TiledTaskGraph,
-                            WORKER_CRASH)
+from repro.core.edt import (ExecutionConfig, Fault, FaultPlan,
+                            RetryPolicy, TiledTaskGraph, WORKER_CRASH)
 from repro.core.poly import Tiling
 from repro.core.programs import PROGRAMS
 
@@ -38,7 +38,8 @@ def _identical(ig, oracle) -> bool:
 
 def _time_run(g, params, shards, faults):
     t0 = time.time()
-    ig = g.index_graph(params, shards=shards, faults=faults, recovery=POLICY)
+    ig = g.index_graph(params, config=ExecutionConfig(
+        shards=shards, faults=faults, recovery=POLICY))
     return time.time() - t0, ig
 
 

@@ -1,0 +1,159 @@
+"""Schedule-service pricing: cold vs warm latency, coalescing, throughput.
+
+The serving posture (``docs/service.md``) promises that once a
+``(program, params)`` key is warm, answering "give me the packed
+schedule" costs two dictionary probes — no scans, no leveling, no
+packing.  This benchmark prices that promise on the flagship ≥1M-task
+jacobi2d instance and a small sweep of sizes:
+
+* **cold_ms / warm_ms** — one cold fill (scan + level + pack under the
+  session config) vs the warm hit for the same key, per product kind;
+* **speedup** — cold/warm ratio (the acceptance floor is ≥50x on the
+  flagship, with warm_ms < 1.0);
+* **verified** — the warm product is the cold product, by reference
+  (which implies byte-identity), and its arrays match an independently
+  materialized oracle;
+* **service throughput** — concurrent warm requests per second through
+  :class:`ScheduleService` (event-loop inline path), plus the coalescing
+  stats from a cold concurrent burst.
+
+Rows feed the ``service`` section of ``benchmarks/run.py`` (schema v5).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.core.edt import ScheduleService, Session, TiledTaskGraph
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+#: (label, program, tiles, params) — flagship last so the sweep stays warm.
+SUITE = [
+    ("small", "jacobi2d", (2, 2, 2), {"T": 4, "N": 48}),
+    ("medium", "jacobi2d", (2, 2, 2), {"T": 8, "N": 128}),
+    ("flagship", "jacobi2d", (2, 2, 2), {"T": 32, "N": 512}),
+]
+SMOKE_SUITE = [
+    ("small", "jacobi2d", (2, 2, 2), {"T": 4, "N": 48}),
+    ("flagship", "jacobi2d", (2, 2, 2), {"T": 6, "N": 96}),
+]
+
+
+def _warm_ms(fn, reps: int = 50) -> float:
+    """Best-of-reps latency for an already-warm call, in ms."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def _verify(ig, oracle) -> bool:
+    return (ig.n == oracle.n
+            and np.array_equal(ig.edge_src, oracle.edge_src)
+            and np.array_equal(ig.edge_tgt, oracle.edge_tgt)
+            and np.array_equal(ig.pred_n, oracle.pred_n))
+
+
+def _key_rows(session, graph, label, params, emit):
+    rows = []
+    for kind, call in (
+            ("graph", lambda: session.index_graph(graph, params)),
+            ("schedule", lambda: session.schedule(graph, params)),
+            ("packed", lambda: session.packed(graph, params))):
+        t0 = time.perf_counter()
+        cold = call()                      # first touch of this product
+        cold_ms = (time.perf_counter() - t0) * 1e3
+        warm_ms = _warm_ms(call)
+        warm = call()
+        same = all(a is b for a, b in zip(
+            cold if isinstance(cold, tuple) else (cold,),
+            warm if isinstance(warm, tuple) else (warm,)))
+        speedup = cold_ms / warm_ms if warm_ms > 0 else float("inf")
+        ig = session.index_graph(graph, params)
+        rows.append({
+            "case": label, "kind": kind, "n_tasks": ig.n,
+            "n_edges": ig.n_edges, "cold_ms": round(cold_ms, 3),
+            "warm_ms": round(warm_ms, 4), "speedup": round(speedup, 1),
+            "sub_ms_warm": warm_ms < 1.0, "verified": bool(same),
+        })
+        emit(f"{label},{kind},{ig.n},{ig.n_edges},{rows[-1]['cold_ms']},"
+             f"{rows[-1]['warm_ms']},{rows[-1]['speedup']},"
+             f"{rows[-1]['sub_ms_warm']},{same}")
+    return rows
+
+
+def _service_stats(graph, params_list, clients: int) -> dict:
+    """Concurrent cold burst (coalescing) + warm throughput."""
+
+    async def drive(service):
+        reqs = [p for p in params_list for _ in range(clients)]
+        t0 = time.perf_counter()
+        await asyncio.gather(
+            *(service.schedule(graph, p) for p in reqs))
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        await asyncio.gather(
+            *(service.schedule(graph, p) for p in reqs))
+        warm_s = time.perf_counter() - t0
+        st = service.stats()
+        return {
+            "keys": len(params_list), "clients": clients,
+            "cold_burst_ms": round(cold_s * 1e3, 2),
+            "warm_burst_ms": round(warm_s * 1e3, 3),
+            "warm_req_per_s": round(len(reqs) / warm_s, 0),
+            "cold_fills": st["cold"], "coalesced": st["coalesced"],
+            "hit_rate": round(st["hit_rate"], 3),
+        }
+
+    service = ScheduleService(config=None)
+    try:
+        return asyncio.run(drive(service))
+    finally:
+        service.close()
+
+
+def run(emit=print, smoke: bool = False):
+    suite = SMOKE_SUITE if smoke else SUITE
+    emit("# schedule service: cold fill vs warm hit per product kind")
+    emit("case,kind,tasks,edges,cold_ms,warm_ms,speedup,sub_ms_warm,verified")
+    rows = []
+    with Session() as session:
+        graph = TiledTaskGraph(PROGRAMS["jacobi2d"](),
+                               {"S": Tiling((2, 2, 2))}, backend="numpy")
+        for label, _, _, params in suite:
+            rows.extend(_key_rows(session, graph, label, params, emit))
+        flag_params = suite[-1][3]
+        flagship = [r for r in rows
+                    if r["case"] == "flagship" and r["kind"] == "packed"][0]
+        if not smoke:
+            assert flagship["n_tasks"] >= 1_000_000, "flagship shrank"
+        # independent oracle for the flagship warm graph (scan from scratch
+        # on a fresh graph object — no cache involvement)
+        oracle = TiledTaskGraph(
+            PROGRAMS["jacobi2d"](), {"S": Tiling((2, 2, 2))},
+            backend="numpy").index_graph(flag_params)
+        flagship["verified"] = bool(
+            flagship["verified"]
+            and _verify(session.index_graph(graph, flag_params), oracle))
+        emit(f"# flagship packed: {flagship['n_tasks']} tasks, "
+             f"cold {flagship['cold_ms']:.0f}ms, warm "
+             f"{flagship['warm_ms']:.3f}ms ({flagship['speedup']}x, "
+             f"oracle-verified={flagship['verified']})")
+    small = [p for _, _, _, p in suite[:-1]] or [suite[-1][3]]
+    svc = _service_stats(
+        TiledTaskGraph(PROGRAMS["jacobi2d"](), {"S": Tiling((2, 2, 2))},
+                       backend="numpy"),
+        small, clients=4)
+    emit(f"# service: {svc['cold_fills']} cold fills, "
+         f"{svc['coalesced']} coalesced, warm {svc['warm_req_per_s']:.0f} "
+         f"req/s, hit rate {svc['hit_rate']}")
+    return {"rows": rows, "flagship": flagship, "service": svc}
+
+
+if __name__ == "__main__":
+    run()

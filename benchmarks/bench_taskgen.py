@@ -42,7 +42,7 @@ from concurrent.futures import ProcessPoolExecutor
 
 import numpy as np
 
-from repro.core.edt import TiledTaskGraph
+from repro.core.edt import ExecutionConfig, TiledTaskGraph
 from repro.core.poly import Tiling
 from repro.core.programs import PROGRAMS
 
@@ -184,18 +184,19 @@ def _bench_one(name, tiles, params, reps, pool):
     g = graphs["numpy"]
     n, e = len(mats["numpy"].tasks), mats["numpy"].n_edges
     for s in SHARD_COUNTS:
+        cfg = ExecutionConfig(shards=s, pool=pool)
         t_mat, m_s = _time(
-            lambda: g.materialize(params, shards=s, pool=pool), reps)
+            lambda: g.materialize(params, config=cfg), reps)
         _check_identical(mats["fraction"], m_s)
         t_enum, ig_s = _time(
-            lambda: g.index_graph(params, shards=s, pool=pool), reps)
+            lambda: g.index_graph(params, config=cfg), reps)
         _check_ig_identical(igs[1], ig_s)
         # §4.3 counters / roots from the merged arrays
         t_pc, pn = _time(
             lambda: np.bincount(ig_s.edge_tgt, minlength=ig_s.n), reps)
         assert np.array_equal(pn, igs[1].pred_n)
         t_roots, rt = _time(
-            lambda: list(g.roots(params, shards=s, pool=pool)), reps)
+            lambda: list(g.roots(params, config=cfg)), reps)
         assert rt == roots["fraction"], f"sharded roots differ (shards={s})"
         rows.append(_row(name, "numpy", s, n, e, t_mat, t_enum, t_pc,
                          t_roots))
@@ -224,10 +225,10 @@ def shard_scale(emit=print, smoke: bool = False, pool=None, reps: int = 2):
                 if s == 1:
                     t, ig = _time(lambda: g.index_graph(params), reps)
                 else:
-                    g.index_graph(params, shards=s, pool=pool)  # warm pool
+                    cfg = ExecutionConfig(shards=s, pool=pool)
+                    g.index_graph(params, config=cfg)  # warm pool
                     t, ig = _time(
-                        lambda: g.index_graph(params, shards=s, pool=pool),
-                        reps)
+                        lambda: g.index_graph(params, config=cfg), reps)
                 if base is None:
                     base, base_ms = ig, t * 1e3
                 else:

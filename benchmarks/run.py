@@ -16,15 +16,19 @@ Sections:
   faults    — recovery overhead: fault-free vs one recoverable injected
               worker crash at 2/4 shards, recovered arrays verified
               byte-identical (docs/robustness.md)
+  service   — graph-cache serving: cold fill vs warm hit per product kind
+              (incl. the ≥1M-task flagship, sub-ms warm target), plus
+              ScheduleService coalescing and warm throughput
+              (docs/service.md)
 
 ``--smoke`` runs a fast subset of every section (small suites, no
 subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 4):
+diff perf artifacts across PRs.  Stable schema (version 5):
 
-    {"schema_version": 4, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 5, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
@@ -45,6 +49,14 @@ New in v4: the ``faults`` section prices the robustness layer — rows
 fault-free sharded materialization against a run recovering from one
 injected worker crash (retry + backoff, byte-identity verified), so the
 artifact tracks the recovery tax across PRs.
+
+New in v5: the ``service`` section prices the parametric graph cache —
+rows ``{case, kind, cold_ms, warm_ms, speedup, sub_ms_warm, verified}``
+per product kind (index graph / schedule / packed device columns), a
+``flagship`` row for the ≥1M-task jacobi2d instance (acceptance: warm
+hit < 1 ms, ≥50x over cold, arrays verified against an uncached oracle),
+and ``service`` stats from a concurrent ScheduleService burst
+(cold fills, coalesced requests, warm requests/s, hit rate).
 """
 from __future__ import annotations
 
@@ -60,7 +72,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "compile", "taskgen", "sync", "executor",
-                             "roofline", "faults"])
+                             "roofline", "faults", "service"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset of each section (sub-minute total)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -68,7 +80,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import (bench_compile, bench_executor, bench_faults,
-                   bench_roofline, bench_sync_overheads, bench_taskgen)
+                   bench_roofline, bench_service, bench_sync_overheads,
+                   bench_taskgen)
 
     sections = {
         "compile": bench_compile.run,
@@ -77,11 +90,12 @@ def main(argv=None) -> int:
         "executor": bench_executor.run,
         "roofline": bench_roofline.run,
         "faults": bench_faults.run,
+        "service": bench_service.run,
     }
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 4, "smoke": bool(args.smoke),
+    report = {"schema_version": 5, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)

@@ -1,4 +1,12 @@
-"""Event-driven task graphs: construction (§3/§4), sync models (§2), execution."""
+"""Event-driven task graphs: construction (§3/§4), sync models (§2), execution.
+
+``__all__`` below is the stable public surface.  Execution knobs go
+through :class:`ExecutionConfig`/:class:`Session` (``docs/backends.md``,
+migration section); the per-call ``shards=``/``parallel=``/``pool=``/
+``faults=``/``recovery=`` kwargs are deprecated shims.
+"""
+from .cache import GraphCache, graph_cache_info
+from .config import CachePolicy, ExecutionConfig, Session
 from .device import (DeviceCounters, DeviceExecutor, DeviceGraph, DeviceRun,
                      DeviceSchedule, pack_graph, pack_schedule)
 from .executor import Counters, Gauge, Sim
@@ -9,6 +17,7 @@ from .recovery import (FailureReport, ResilientRun, RetryPolicy,
                        ScheduleValidationError, ShardRecoveryError,
                        StallError, StallReport, TaskGroupError, Watchdog,
                        poisoned_cone, simulate_indexed_resilient)
+from .service import ScheduleService
 from .shard import ShardPlan, ShardSpec, plan_shards, scan_sharded
 from .syncmodels import (MODELS, RunResult, run_autodec, run_autodec_nosrc,
                          run_counted, run_model, run_prescribed, run_tags1,
@@ -18,12 +27,14 @@ from .taskgraph import (Dependence, IndexedGraph, MaterializedGraph,
 from .threaded import (ThreadedAutodec, ThreadedRunResult, run_graph_threaded,
                        run_graph_threaded_resilient)
 from .wavefront import (IndexedSchedule, WavefrontSchedule, levels_from_array,
-                        simulate_indexed, simulate_schedule, synthesize,
-                        synthesize_indexed)
+                        schedule_from_graph, simulate_indexed,
+                        simulate_schedule, synthesize, synthesize_indexed)
 
 __all__ = [
     "PolyhedralProgram", "Statement", "Dependence", "TiledTaskGraph",
     "MaterializedGraph", "IndexedGraph", "TaskId",
+    "ExecutionConfig", "CachePolicy", "Session",
+    "GraphCache", "graph_cache_info", "ScheduleService",
     "ShardSpec", "ShardPlan", "plan_shards", "scan_sharded",
     "DeviceExecutor", "DeviceRun", "DeviceCounters", "DeviceGraph",
     "DeviceSchedule", "pack_graph", "pack_schedule",
@@ -41,5 +52,5 @@ __all__ = [
     "Watchdog", "poisoned_cone", "simulate_indexed_resilient", "ResilientRun",
     "WavefrontSchedule", "synthesize", "simulate_schedule",
     "IndexedSchedule", "synthesize_indexed", "simulate_indexed",
-    "levels_from_array",
+    "levels_from_array", "schedule_from_graph",
 ]

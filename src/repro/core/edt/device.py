@@ -49,7 +49,8 @@ from typing import Optional, Union
 
 import numpy as np
 
-from .faults import DROPPED_DECREMENT, FaultPlan
+from .config import UNSET, resolve_execution
+from .faults import DROPPED_DECREMENT
 from .recovery import ScheduleValidationError, StallError, StallReport
 from .taskgraph import IndexedGraph, TiledTaskGraph
 from .wavefront import IndexedSchedule, levels_from_array
@@ -360,13 +361,21 @@ class DeviceExecutor:
     """Counted-sync execution of an index graph on the jax layer.
 
     Construct from a :class:`TiledTaskGraph` (``params`` required;
-    ``shards=``/``parallel=``/``pool=`` fan the generation scans out as
-    usual) or directly from an :class:`IndexedGraph`.  With ``schedule=``
-    (an :class:`IndexedSchedule`, e.g. from ``synthesize_indexed``) the
-    O(V+E) replay sweep runs and *validates* the schedule against the
-    counters; without it the discover sweep derives the frontiers on
-    device.  ``use_pallas=True`` routes the discover decrement through the
-    pallas kernel (``interpret=`` overrides the CPU auto-fallback).
+    ``config=``/``session=`` drive the generation scans — shard fan-out,
+    pool, recovery; a session serves the graph from its cache) or directly
+    from an :class:`IndexedGraph`.  The per-call
+    ``shards=``/``parallel=``/``pool=``/``faults=`` kwargs are the
+    deprecated spelling of the same config; ``config.faults`` also arms
+    execution-side injection (dropped decrements) exactly as the old
+    ``faults=`` did.  With ``schedule=`` (an :class:`IndexedSchedule`,
+    e.g. from ``synthesize_indexed``) the O(V+E) replay sweep runs and
+    *validates* the schedule against the counters; without it the discover
+    sweep derives the frontiers on device.  ``packed=(DeviceGraph,
+    DeviceSchedule | None)`` skips the host-side packing entirely — the
+    graph cache hands its stored device columns through here, so a warm
+    executor build is allocation-free.  ``use_pallas=True`` routes the
+    discover decrement through the pallas kernel (``interpret=`` overrides
+    the CPU auto-fallback).
 
     ``run()`` returns a :class:`DeviceRun` whose ``levels`` are
     byte-identical to ``synthesize_indexed``'s for the same graph and whose
@@ -378,26 +387,37 @@ class DeviceExecutor:
     def __init__(self, graph: Union[TiledTaskGraph, IndexedGraph],
                  params: Optional[dict] = None, *,
                  schedule: Optional[IndexedSchedule] = None,
-                 shards: Optional[int] = None, parallel: bool = False,
-                 pool=None, use_pallas: bool = False,
+                 shards=UNSET, parallel=UNSET, pool=UNSET, faults=UNSET,
+                 use_pallas: bool = False,
                  interpret: Optional[bool] = None,
-                 faults: Optional[FaultPlan] = None):
+                 config=None, session=None, packed=None):
+        cfg, sess = resolve_execution(
+            config, session, stacklevel=3,
+            legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                        faults=faults))
         if isinstance(graph, TiledTaskGraph):
             if params is None:
                 raise TypeError("params required with a TiledTaskGraph")
-            ig = graph.index_graph(params, shards=shards, parallel=parallel,
-                                   pool=pool)
+            ig = (sess.index_graph(graph, params) if sess is not None
+                  else graph._index_graph_cfg(params, cfg))
         else:
             ig = graph
-        self.faults = faults
-        if use_pallas and schedule is not None:
+        self.faults = cfg.faults
+        if packed is not None and schedule is not None:
+            raise TypeError("pass schedule= or packed=, not both")
+        if use_pallas and (schedule is not None
+                           or (packed is not None and packed[1] is not None)):
             raise TypeError(
                 "use_pallas applies to the discover sweep only; the replay "
                 "sweep's decrement is a per-level scatter, not the pallas "
                 "wavefront kernel — drop schedule= to price the kernel")
         self.ig = ig
-        self.dg = pack_graph(ig)
-        self.ds = pack_schedule(ig, schedule) if schedule is not None else None
+        if packed is not None:
+            self.dg, self.ds = packed
+        else:
+            self.dg = pack_graph(ig)
+            self.ds = (pack_schedule(ig, schedule)
+                       if schedule is not None else None)
         self.use_pallas = use_pallas
         self.interpret = interpret
         # compiled sweeps + uploaded arrays, built lazily on the first run()

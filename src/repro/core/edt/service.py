@@ -1,0 +1,151 @@
+"""Async schedule service: warm answers from the cache, cold fills coalesced.
+
+"A Tale of Three Runtimes" argues generated EDT code must be competitive
+with hand-tuned runtimes *end to end* — for a serving workload that means
+the answer to "give me the frontier stream / packed schedule for program P
+at size N" has to be sub-millisecond once warm.  :class:`ScheduleService`
+is that front end, sitting on a :class:`~repro.core.edt.config.Session`:
+
+* **Warm hits** are answered inline on the event loop from the session's
+  :class:`~repro.core.edt.cache.GraphCache` — two dictionary probes, no
+  thread hop, no pool, no scans.
+* **Cold misses** run on a small thread pool (the event loop never
+  blocks on a scan) under the session's
+  :class:`~repro.core.edt.config.ExecutionConfig` — so a sharded config
+  fans the polyhedral scans across the session's *process* pool with the
+  PR-6 recovery semantics (retry + backoff + pool rebuild,
+  ``docs/robustness.md``) exactly as a direct ``index_graph`` call would.
+* **Concurrent requests for the same key coalesce**: the first request
+  registers an in-flight future before it ever awaits, later arrivals
+  await that future, and exactly one materialization runs no matter how
+  many clients ask (asserted by ``tests/test_graph_cache.py``).
+
+``launch/edt_serve.py`` wires this into a CLI;
+``benchmarks/bench_service.py`` prices cold vs warm latency and
+concurrent-client throughput.
+"""
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator, Optional
+
+from .cache import _params_key
+from .config import ExecutionConfig, Session
+
+#: product kind -> the cache field whose presence makes the answer warm
+#: (fields fill in dependency order and evict as one entry, so the
+#: terminal field present ⇒ everything the kind returns is present).
+_KINDS = {"graph": "ig", "schedule": "schedule", "packed": "ds"}
+
+
+class ScheduleService:
+    """Async batched front end over one session's graph cache.
+
+    Construct around an existing :class:`Session` (shared cache/pool) or
+    let the service own one built from ``config=``.  All request methods
+    are coroutines and must run on a single event loop (the in-flight
+    table relies on the loop's run-to-completion scheduling for its
+    check-then-register atomicity).
+    """
+
+    def __init__(self, session: Optional[Session] = None, *,
+                 config: Optional[ExecutionConfig] = None,
+                 max_workers: int = 2):
+        if session is not None and config is not None:
+            raise TypeError("pass session= or config=, not both")
+        self.session = session if session is not None else Session(config)
+        self._own_session = session is None
+        self._inflight: dict = {}
+        self._exec = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="edt-serve")
+        self.requests = 0
+        self.warm = 0
+        self.cold = 0
+        self.coalesced = 0
+
+    # ------------------------------------------------------------ requests
+    async def index_graph(self, graph, params: dict):
+        """The :class:`IndexedGraph` for ``(graph, params)``."""
+        return await self._get(graph, params, "graph")
+
+    async def schedule(self, graph, params: dict):
+        """``(IndexedGraph, IndexedSchedule)`` for ``(graph, params)``."""
+        return await self._get(graph, params, "schedule")
+
+    async def packed(self, graph, params: dict):
+        """``(DeviceGraph, DeviceSchedule)`` — the device-ready columns."""
+        return await self._get(graph, params, "packed")
+
+    async def frontiers(self, graph, params: dict) -> AsyncIterator:
+        """The frontier stream: one int64 id array per wavefront level.
+
+        The schedule resolves once (warm or coalesced-cold), then levels
+        stream without further cache traffic — the async spelling of
+        driving ``simulate_indexed`` level by level.
+        """
+        _, sched = await self._get(graph, params, "schedule")
+        for level in sched.levels:
+            yield level
+
+    async def batch(self, graph, params_list, kind: str = "schedule"):
+        """Resolve many sizes of one program concurrently (one result per
+        request, same order).  Duplicate keys coalesce to one fill."""
+        return await asyncio.gather(
+            *(self._get(graph, p, kind) for p in params_list))
+
+    # ------------------------------------------------------------ internals
+    def _fill(self, graph, params: dict, kind: str):
+        cache, cfg = self.session.cache, self.session.runtime_config()
+        if kind == "graph":
+            return cache.graph(graph, params, cfg)
+        if kind == "schedule":
+            return cache.schedule(graph, params, cfg)
+        return cache.packed(graph, params, cfg)
+
+    async def _get(self, graph, params: dict, kind: str):
+        self.requests += 1
+        cache = self.session.cache
+        if cache.peek(graph, params, _KINDS[kind]) is not None:
+            # warm: answer inline — never touches the pool or the executor
+            self.warm += 1
+            return self._fill(graph, params, kind)
+        key = (graph.fingerprint(), _params_key(params), kind)
+        fut = self._inflight.get(key)
+        if fut is not None:
+            self.coalesced += 1
+            return await fut
+        # cold: register the in-flight future synchronously (no await
+        # between the miss check and this line), then materialize off-loop
+        self.cold += 1
+        loop = asyncio.get_running_loop()
+        fut = loop.run_in_executor(
+            self._exec, self._fill, graph, dict(params), kind)
+        self._inflight[key] = fut
+        try:
+            return await fut
+        finally:
+            self._inflight.pop(key, None)
+
+    # ---------------------------------------------------------- lifecycle
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests,
+            "warm": self.warm,
+            "cold": self.cold,
+            "coalesced": self.coalesced,
+            "hit_rate": (self.warm + self.coalesced) / max(1, self.requests),
+            "inflight": len(self._inflight),
+            "cache": self.session.cache.info(),
+        }
+
+    def close(self) -> None:
+        self._exec.shutdown(wait=True)
+        if self._own_session:
+            self.session.close()
+
+    async def __aenter__(self) -> "ScheduleService":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        self.close()

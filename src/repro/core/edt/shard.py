@@ -43,9 +43,10 @@ Entry points:
 
 * :func:`scan_sharded` — run a plan on a process pool, return the merged
   :class:`ShardedScans`.
-* ``TiledTaskGraph.materialize(params, shards=n)`` /
-  ``index_graph(params, shards=n)`` / ``roots(params, shards=n)`` — the
-  graph-level APIs thread through here.
+* ``TiledTaskGraph.materialize(params, config=ExecutionConfig(shards=n))``
+  / ``index_graph(...)`` / ``roots(...)`` — the graph-level APIs thread
+  through here whenever the config resolves to >1 shard (the old
+  per-call ``shards=n`` kwarg still works via the deprecation shim).
 * :func:`plan_shards` — the deterministic partition (inspectable/testable
   without a pool).
 """

@@ -32,6 +32,7 @@ from ..poly import (CountingFunction, LoopNest, Polyhedron, Tiling,
                     make_counting_function, project_onto, tile_dependence,
                     tile_domain)
 from ..poly.scanning import _row_ints
+from .config import UNSET, resolve_execution
 
 TaskId = tuple[str, tuple[int, ...]]  # (statement name, tile coords)
 
@@ -248,6 +249,7 @@ class TiledTaskGraph:
         # driver-side restricted nests for sharded block counting
         # ((kind, key) -> (nest, diag nest); see repro.core.edt.shard)
         self._shard_nests: dict = {}
+        self._fingerprint: Optional[str] = None
 
     # ------------------------------------------------------------- tasks
     def tasks(self, params: dict[str, int]) -> Iterator[TaskId]:
@@ -329,19 +331,31 @@ class TiledTaskGraph:
                             for n, projs in out.items()}
         return out
 
-    def roots(self, params: dict[str, int], shards: Optional[int] = None,
-              parallel: bool = False, pool=None) -> Iterator[TaskId]:
+    def roots(self, params: dict[str, int], shards=UNSET, parallel=UNSET,
+              pool=UNSET, faults=UNSET, recovery=UNSET, *,
+              config=None, session=None) -> Iterator[TaskId]:
         """Tasks with no predecessors (the master's scan, made O(1)-startup by
         preschedule in the autodec model).
 
-        With ``shards=n`` the root set derives from the merged sharded index
-        graph (``pred_n == 0`` per statement block) — same tasks, same
-        order as the in-process scans.
+        Execution knobs arrive via ``config=`` (an
+        :class:`~repro.core.edt.config.ExecutionConfig`) or ``session=``;
+        the per-call kwargs are a deprecated spelling of the same config.
+        Sharded runs derive the root set from the merged index graph
+        (``pred_n == 0`` per statement block) — same tasks, same order as
+        the in-process scans — and, unlike the pre-config signature (which
+        dropped them), ``faults``/``recovery`` reach those scans too.
         """
-        n_shards = self._resolve_shards(shards, parallel)
-        if n_shards > 1:
-            return self._roots_indexed(
-                self.index_graph(params, shards=n_shards, pool=pool))
+        cfg, sess = resolve_execution(
+            config, session, stacklevel=3,
+            legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                        faults=faults, recovery=recovery))
+        if sess is not None:
+            return sess.roots(self, params)
+        return self._roots_cfg(params, cfg)
+
+    def _roots_cfg(self, params: dict[str, int], cfg) -> Iterator[TaskId]:
+        if cfg.resolve_shards() > 1:
+            return self._roots_indexed(self._index_graph_cfg(params, cfg))
         pv = self._pv(params)
         if self.backend == "numpy":
             return self._roots_numpy(pv)
@@ -559,9 +573,9 @@ class TiledTaskGraph:
         return scan_sharded(self, params, shards, pool=pool,
                             faults=faults, recovery=recovery)
 
-    def index_graph(self, params: dict[str, int],
-                    shards: Optional[int] = None, parallel: bool = False,
-                    pool=None, faults=None, recovery=None) -> "IndexedGraph":
+    def index_graph(self, params: dict[str, int], shards=UNSET,
+                    parallel=UNSET, pool=UNSET, faults=UNSET, recovery=UNSET,
+                    *, config=None, session=None) -> "IndexedGraph":
         """The whole task graph as flat index arrays (no per-task tuples).
 
         The numpy backend's native graph product: tasks are global integer
@@ -571,20 +585,38 @@ class TiledTaskGraph:
         array output: TaskId labels are derived lazily on access, so
         generation itself never touches per-task Python objects.
 
-        ``shards=n`` (or ``parallel=True``) fans the tile/edge scans out
-        across processes (see :mod:`.shard`) and merges the per-shard index
-        arrays — byte-identical output, any backend.  ``pool`` reuses an
-        existing ``ProcessPoolExecutor`` across calls.  ``recovery=``
-        (a :class:`~repro.core.edt.recovery.RetryPolicy`) arms shard retry
-        with backoff; ``faults=`` injects a seeded
-        :class:`~repro.core.edt.faults.FaultPlan` (see
-        ``docs/robustness.md``).
+        Execution knobs arrive via ``config=`` (an
+        :class:`~repro.core.edt.config.ExecutionConfig`: shard fan-out,
+        pool reuse, fault injection, retry policy — see
+        :mod:`.shard` / ``docs/robustness.md``) or ``session=`` (cached by
+        ``(fingerprint, params)`` in the session's
+        :class:`~repro.core.edt.cache.GraphCache`).  The per-call
+        ``shards=``/``parallel=``/``pool=``/``faults=``/``recovery=``
+        kwargs are the deprecated spelling of the same config.
+        """
+        cfg, sess = resolve_execution(
+            config, session, stacklevel=3,
+            legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                        faults=faults, recovery=recovery))
+        if sess is not None:
+            return sess.index_graph(self, params)
+        return self._index_graph_cfg(params, cfg)
+
+    def _index_graph_cfg(self, params: dict[str, int], cfg,
+                         scans=None) -> "IndexedGraph":
+        """``index_graph`` body under a resolved config.
+
+        ``scans`` injects pre-merged scan products (a
+        :class:`~repro.core.edt.shard.ShardedScans`) in place of both the
+        in-process and the sharded scans — the graph cache's incremental
+        re-materialization hands stitched blocks through here.
         """
         pv = self._pv(params)
-        n_shards = self._resolve_shards(shards, parallel)
-        scans = (self._sharded_scans(params, n_shards, pool=pool,
-                                     faults=faults, recovery=recovery)
-                 if n_shards > 1 else None)
+        n_shards = cfg.resolve_shards()
+        if scans is None and n_shards > 1:
+            scans = self._sharded_scans(params, n_shards, pool=cfg.pool,
+                                        faults=cfg.faults,
+                                        recovery=cfg.recovery)
         info = self._stmt_index(
             pv, with_tasks=False,
             tiles=scans.tiles if scans is not None else None)
@@ -592,11 +624,16 @@ class TiledTaskGraph:
         blocks = [(name, info[name][4]) for name in self.program.statements]
         n = sum(arr.shape[0] for _, arr in blocks)
         srcs, tgts = [], []
+        spans: dict[int, tuple[int, int]] = {}
+        off = 0
         for name in self.program.statements:
             for td in self._out[name]:
                 gsrc, gtgt = self._edge_indices(td, pv, info, scans, base,
                                                 global_ids=True)
-                if gsrc.shape[0]:
+                ne = int(gsrc.shape[0])
+                spans[td.idx] = (off, off + ne)
+                off += ne
+                if ne:
                     srcs.append(gsrc)
                     tgts.append(gtgt)
         z = np.zeros(0, dtype=np.int64)
@@ -604,13 +641,12 @@ class TiledTaskGraph:
         edge_tgt = np.concatenate(tgts) if tgts else z
         return IndexedGraph(
             stmt_blocks=blocks, n=n, edge_src=edge_src, edge_tgt=edge_tgt,
-            pred_n=np.bincount(edge_tgt, minlength=n))
+            pred_n=np.bincount(edge_tgt, minlength=n), dep_spans=spans)
 
     # ------------------------------------------------------------ materialize
-    def materialize(self, params: dict[str, int],
-                    shards: Optional[int] = None, parallel: bool = False,
-                    pool=None, faults=None,
-                    recovery=None) -> "MaterializedGraph":
+    def materialize(self, params: dict[str, int], shards=UNSET,
+                    parallel=UNSET, pool=UNSET, faults=UNSET, recovery=UNSET,
+                    *, config=None, session=None) -> "MaterializedGraph":
         """Explicit adjacency (for tests / the prescribed model / wavefronts).
 
         Batched: the parameter vector, compiled scan functions, and
@@ -622,18 +658,30 @@ class TiledTaskGraph:
         dependence's edge list is one vectorized scan of the joint Δ_T
         polyhedron (see ``_materialize_numpy``).
 
-        ``shards=n`` / ``parallel=True`` runs those scans on a process pool
-        (:mod:`.shard`) and merges the blocks — identical graph, any
-        backend.  Callers that only need arrays should prefer
+        Execution knobs arrive via ``config=``/``session=``; the per-call
+        kwargs are the deprecated spelling.  Sharded configs run the scans
+        on a process pool (:mod:`.shard`) and merge the blocks — identical
+        graph, any backend.  Callers that only need arrays should prefer
         :meth:`index_graph`, which never builds the per-task dicts.
         """
+        cfg, sess = resolve_execution(
+            config, session, stacklevel=3,
+            legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                        faults=faults, recovery=recovery))
+        if sess is not None:
+            return sess.materialize(self, params)
+        return self._materialize_cfg(params, cfg)
+
+    def _materialize_cfg(self, params: dict[str, int],
+                         cfg) -> "MaterializedGraph":
         pv = self._pv(params)
-        n_shards = self._resolve_shards(shards, parallel)
+        n_shards = cfg.resolve_shards()
         if n_shards > 1:
             return self._materialize_numpy(
-                pv, scans=self._sharded_scans(params, n_shards, pool=pool,
-                                              faults=faults,
-                                              recovery=recovery))
+                pv, scans=self._sharded_scans(params, n_shards,
+                                              pool=cfg.pool,
+                                              faults=cfg.faults,
+                                              recovery=cfg.recovery))
         if self.backend == "numpy":
             return self._materialize_numpy(pv)
         tasks: list[TaskId] = []
@@ -660,6 +708,51 @@ class TiledTaskGraph:
                         pred_n[s] += 1
         return MaterializedGraph(tasks, succ, pred_n)
 
+    # ------------------------------------------------------------- identity
+    def fingerprint(self) -> str:
+        """Canonical parametric-program fingerprint (sha256 hex digest).
+
+        Hashes the canonicalized tile domains and effective inter-tile
+        dependence polyhedra (plus tilings, tiling method, and parameter
+        list) — everything that determines the generated graph and nothing
+        that doesn't.  The scanning ``backend`` is deliberately excluded:
+        all backends produce byte-identical graphs (the equivalence suite's
+        invariant), so cache entries keyed by this fingerprint are shared
+        across backends and across graph instances rebuilt from the same
+        program.
+        """
+        if self._fingerprint is None:
+            import hashlib
+            parts = [repr(self.param_names), self.method]
+            for name in self.program.statements:
+                p = self.tile_domains[name].canonical()
+                parts.append(repr((name, self.tilings[name].sizes,
+                                   p.ineqs, p.eqs)))
+            for td in self.tiled_deps:
+                p = td.delta_t.canonical()
+                parts.append(repr((td.dep.src, td.dep.tgt, p.ineqs, p.eqs)))
+            self._fingerprint = hashlib.sha256(
+                "\n".join(parts).encode()).hexdigest()
+        return self._fingerprint
+
+    def scan_units(self) -> list[tuple[str, object, LoopNest]]:
+        """Every scan unit behind ``index_graph``: ``(kind, key, nest)``.
+
+        Statement tile domains come first (``kind = shard.TILES``, keyed by
+        statement name), then the joint dependence polyhedra
+        (``kind = shard.EDGES``, keyed by ``tiled_deps`` index) — the same
+        unit decomposition the shard planner partitions, reused by the
+        graph cache to decide per-unit outer-param reuse
+        (:meth:`LoopNest.outer_only_params`).
+        """
+        from .shard import EDGES, TILES  # local import: avoid cycle
+        units: list[tuple[str, object, LoopNest]] = []
+        for name in self.program.statements:
+            units.append((TILES, name, self.tile_nests[name]))
+        for td in self.tiled_deps:
+            units.append((EDGES, td.idx, self._joint_nest(td)))
+        return units
+
     def _pv(self, params: dict[str, int]) -> list[int]:
         return [params[n] for n in self.param_names]
 
@@ -679,6 +772,11 @@ class IndexedGraph:
     edge_src: "np.ndarray"
     edge_tgt: "np.ndarray"
     pred_n: "np.ndarray"    # int64 in-degrees, indexed by global task id
+    # per-dependence [start, stop) slice of the edge arrays, keyed by
+    # tiled_deps index (deps are concatenated in statement × out-dep order).
+    # Lets the graph cache reconstruct a dependence's raw joint rows without
+    # storing them; absent on hand-built graphs.
+    dep_spans: Optional[dict[int, tuple[int, int]]] = None
     _tasks: Optional[list[TaskId]] = None
 
     @property
@@ -693,6 +791,14 @@ class IndexedGraph:
     @property
     def n_edges(self) -> int:
         return int(self.edge_src.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Array payload size (the graph cache's byte-budget unit)."""
+        b = self.edge_src.nbytes + self.edge_tgt.nbytes + self.pred_n.nbytes
+        for _, arr in self.stmt_blocks:
+            b += arr.nbytes
+        return int(b)
 
 
 @dataclass

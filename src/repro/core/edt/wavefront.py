@@ -27,6 +27,7 @@ from typing import Optional
 
 import numpy as np
 
+from .config import UNSET, resolve_execution
 from .executor import Sim
 from .taskgraph import IndexedGraph, TaskId, TiledTaskGraph
 
@@ -76,23 +77,28 @@ class IndexedSchedule:
                 "avg_width": n / max(1, self.depth)}
 
 
-def synthesize(graph: TiledTaskGraph, params: dict,
-               shards: Optional[int] = None,
-               parallel: bool = False, pool=None) -> WavefrontSchedule:
+def synthesize(graph: TiledTaskGraph, params: dict, shards=UNSET,
+               parallel=UNSET, pool=UNSET, faults=UNSET, recovery=UNSET, *,
+               config=None, session=None) -> WavefrontSchedule:
     """Longest-path leveling of the tile graph.
 
     ``numpy``-backend graphs level from flat index arrays (whole wavefronts
     per step); the scalar path materializes and walks the dict graph.  Both
-    produce identical schedules.  ``shards=``/``parallel=`` fans the
-    underlying scans across processes (any backend) — the schedule is
-    unchanged, only generation parallelizes.
+    produce identical schedules.  Execution knobs arrive via
+    ``config=``/``session=`` (the per-call kwargs are the deprecated
+    spelling); sharded configs fan the underlying scans across processes
+    (any backend) — the schedule is unchanged, only generation
+    parallelizes.
     """
-    if graph._resolve_shards(shards, parallel) > 1:
-        return _synthesize_arrays(graph, params, shards=shards,
-                                  parallel=parallel, pool=pool)
-    if graph.backend == "numpy":
-        return _synthesize_arrays(graph, params)
-    g = graph.materialize(params)
+    cfg, sess = resolve_execution(
+        config, session, stacklevel=3,
+        legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                    faults=faults, recovery=recovery))
+    if sess is not None:
+        return sess.synthesize(graph, params)
+    if cfg.resolve_shards() > 1 or graph.backend == "numpy":
+        return _synthesize_from_ig(graph._index_graph_cfg(params, cfg))
+    g = graph._materialize_cfg(params, cfg)
     indeg = dict(g.pred_n)
     level = {t: 0 for t in g.tasks}
     cur = sorted(t for t in g.tasks if indeg[t] == 0)
@@ -157,11 +163,8 @@ def _level_array(ig: IndexedGraph) -> "np.ndarray":
     return level
 
 
-def _synthesize_arrays(graph: TiledTaskGraph, params: dict,
-                       shards: Optional[int] = None, parallel: bool = False,
-                       pool=None) -> WavefrontSchedule:
+def _synthesize_from_ig(ig: IndexedGraph) -> WavefrontSchedule:
     """Array-leveled schedule with TaskId labels (see :func:`_level_array`)."""
-    ig = graph.index_graph(params, shards=shards, parallel=parallel, pool=pool)
     lv = _level_array(ig).tolist()
     level_of = dict(zip(ig.tasks, lv))
     buckets: dict[int, list[TaskId]] = {}
@@ -188,19 +191,38 @@ def levels_from_array(level: "np.ndarray") -> list["np.ndarray"]:
     return np.split(order, bounds)
 
 
-def synthesize_indexed(graph: TiledTaskGraph, params: dict,
-                       shards: Optional[int] = None, parallel: bool = False,
-                       pool=None) -> tuple[IndexedGraph, IndexedSchedule]:
+def schedule_from_graph(ig: IndexedGraph) -> IndexedSchedule:
+    """Level an already-materialized index graph (pure index space).
+
+    The second half of :func:`synthesize_indexed`, split out so callers
+    holding a cached :class:`IndexedGraph` (the graph cache, the schedule
+    service) never re-materialize just to level.
+    """
+    level = _level_array(ig)
+    return IndexedSchedule(levels=levels_from_array(level), level_of=level)
+
+
+def synthesize_indexed(graph: TiledTaskGraph, params: dict, shards=UNSET,
+                       parallel=UNSET, pool=UNSET, faults=UNSET,
+                       recovery=UNSET, *, config=None,
+                       session=None) -> tuple[IndexedGraph, IndexedSchedule]:
     """Level the graph without ever leaving index space.
 
     The sharded/million-task path: the (optionally sharded) index graph is
     leveled by :func:`_level_array` and bucketed with one stable argsort —
     no TaskId tuples, no per-task dicts.  Returns the graph too, since
     executors need the id -> label blocks only if they label at all.
+    Knobs via ``config=``/``session=`` (session calls are cached — warm
+    hits return the stored arrays); the per-call kwargs are deprecated.
     """
-    ig = graph.index_graph(params, shards=shards, parallel=parallel, pool=pool)
-    level = _level_array(ig)
-    return ig, IndexedSchedule(levels=levels_from_array(level), level_of=level)
+    cfg, sess = resolve_execution(
+        config, session, stacklevel=3,
+        legacy=dict(shards=shards, parallel=parallel, pool=pool,
+                    faults=faults, recovery=recovery))
+    if sess is not None:
+        return sess.schedule(graph, params)
+    ig = graph._index_graph_cfg(params, cfg)
+    return ig, schedule_from_graph(ig)
 
 
 def simulate_schedule(schedule: WavefrontSchedule, workers: int = 4,

@@ -239,6 +239,7 @@ class LoopNest:
         self._scan_np_fn = None
         self._count_np_fn = None
         self._np_source: Optional[str] = None
+        self._block_nest: Optional["LoopNest"] = None
         # canonical-polyhedron cache key: rows are tuples of Fractions.
         self._cache_key = (self.poly.dim_names, self.poly.param_names,
                            self.poly.ineqs, self.poly.eqs)
@@ -708,6 +709,42 @@ class LoopNest:
         if lb is None or ub is None:
             return None
         return lb, ub
+
+    def outer_only_params(self) -> frozenset[int]:
+        """Parameter indices that bound ONLY the outermost loop dim.
+
+        A parameter is *outer-only* when its coefficient is zero in every
+        level-k bound row for k >= 1: fixing the outer coordinate, the inner
+        scan is independent of it.  Pure-parameter guards do not disqualify
+        (they gate feasibility of the whole scan, never row content), so for
+        two feasible parameter vectors differing only in outer-only params,
+        the rows whose outer coordinate lies in both scans' ranges are
+        byte-identical — the reuse invariant behind the graph cache's
+        incremental re-materialization (:mod:`repro.core.edt.cache`).
+        """
+        inner = set()
+        for k in range(1, self.ndim):
+            los, ups = self._int_levels[k]
+            for r in los + ups:
+                for j, c in enumerate(r.par):
+                    if c:
+                        inner.add(j)
+        return frozenset(j for j in range(self.nparam) if j not in inner)
+
+    def block_nest(self) -> "LoopNest":
+        """The ``__slo``/``__shi``-extended twin of this nest (lazy, cached).
+
+        Scans exactly the rows of the full scan whose outermost coordinate
+        falls in ``[lo, hi]`` when called with ``params + (lo, hi)`` — the
+        same restricted polyhedron the shard planner partitions
+        (:func:`shard_polyhedron`), shared here so driver-side consumers
+        (the graph cache's incremental path) reuse one canonical compile.
+        """
+        assert self.ndim > 0, "cannot block-restrict a 0-dim nest"
+        if self._block_nest is None:
+            self._block_nest = LoopNest(shard_polyhedron(self.poly),
+                                        backend=self.backend)
+        return self._block_nest
 
     def first(self, params=()) -> Optional[tuple[int, ...]]:
         return next(self.iterate(params), None)

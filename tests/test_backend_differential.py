@@ -29,7 +29,7 @@ try:
 except ImportError:  # property tests skip; deterministic tests still run
     from hypo_stub import HealthCheck, given, settings, st
 
-from repro.core.edt import PolyhedralProgram, TiledTaskGraph
+from repro.core.edt import ExecutionConfig, PolyhedralProgram, TiledTaskGraph
 from repro.core.edt.shard import plan_shards, scan_sharded
 from repro.core.poly import Polyhedron, Tiling
 from repro.core.programs import PROGRAMS, dep
@@ -146,18 +146,19 @@ def assert_paths_identical(prog, tilings, params, pool=None,
                                    ig.edge_tgt.tolist()))
     assert edges == sorted((u, v) for u, ss in ref.succ.items() for v in ss)
     for s in shard_counts:
+        cfg = ExecutionConfig(shards=s, pool=pool)
         for gb in (g, graphs["compiled"]):
-            m = gb.materialize(params, shards=s, pool=pool)
+            m = gb.materialize(params, config=cfg)
             assert m.tasks == ref.tasks, f"sharded tasks differ (x{s})"
             assert m.succ == ref.succ, f"sharded adjacency differs (x{s})"
             assert m.pred_n == ref.pred_n, f"sharded counts differ (x{s})"
-        igs = g.index_graph(params, shards=s, pool=pool)
+        igs = g.index_graph(params, config=cfg)
         assert np.array_equal(igs.edge_src, ig.edge_src)
         assert np.array_equal(igs.edge_tgt, ig.edge_tgt)
         assert np.array_equal(igs.pred_n, ig.pred_n)
         for (na, xa), (nb, xb) in zip(igs.stmt_blocks, ig.stmt_blocks):
             assert na == nb and np.array_equal(xa, xb)
-        assert list(g.roots(params, shards=s, pool=pool)) == ref_roots
+        assert list(g.roots(params, config=cfg)) == ref_roots
         if not use_shm:
             scans = scan_sharded(g, params, s, pool=pool, use_shm=False)
             m = g._materialize_numpy(g._pv(params), scans=scans)

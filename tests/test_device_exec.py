@@ -29,9 +29,9 @@ import pytest
 from test_backend_differential import _build_program
 
 from repro import compat
-from repro.core.edt import (DeviceExecutor, IndexedGraph, TiledTaskGraph,
-                            levels_from_array, simulate_indexed,
-                            synthesize_indexed)
+from repro.core.edt import (DeviceExecutor, ExecutionConfig, IndexedGraph,
+                            TiledTaskGraph, levels_from_array,
+                            simulate_indexed, synthesize_indexed)
 from repro.core.edt.device import (decrement_reference, make_pallas_step,
                                    pack_graph, pack_schedule)
 from repro.core.edt.wavefront import IndexedSchedule
@@ -53,7 +53,8 @@ def pool():
 def assert_device_matches_host(graph: TiledTaskGraph, params: dict,
                                shards=None, pool=None) -> None:
     """The differential property: device frontiers == host frontiers."""
-    ig, sched = synthesize_indexed(graph, params, shards=shards, pool=pool)
+    ig, sched = synthesize_indexed(
+        graph, params, config=ExecutionConfig(shards=shards, pool=pool))
     runs = {
         "discover": DeviceExecutor(ig).run(),
         "replay": DeviceExecutor(ig, schedule=sched).run(),
@@ -297,7 +298,8 @@ def test_million_task_jacobi2d_device_matches_host(pool):
     g = TiledTaskGraph(PROGRAMS["jacobi2d"](), {"S": Tiling((2, 2, 2))},
                        backend="numpy")
     params = {"T": 32, "N": 512}
-    ig, sched = synthesize_indexed(g, params, shards=2, pool=pool)
+    ig, sched = synthesize_indexed(
+        g, params, config=ExecutionConfig(shards=2, pool=pool))
     assert ig.n >= 1_000_000
     run = DeviceExecutor(ig, schedule=sched).run()   # (1) validates on device
     assert run.counters.tasks_finished == ig.n

@@ -35,6 +35,7 @@ except ImportError:
     from hypo_stub import HealthCheck, given, settings, st
 
 from repro.core.edt import (DROPPED_DECREMENT, SHM_ATTACH_FAIL,
+                            ExecutionConfig,
                             TASK_BODY_ERROR, WORKER_CRASH, WORKER_HANG,
                             Fault, FaultPlan, RetryPolicy,
                             ShardRecoveryError, Sim, StallError,
@@ -113,7 +114,8 @@ def test_sharded_recoverable_is_byte_identical(fault, shm_guard):
     plan = FaultPlan(faults=(fault,))
     policy = FAST_RETRY if fault.kind != WORKER_HANG else RetryPolicy(
         max_retries=3, base_delay=0.001, timeout=0.6)
-    ig = g.index_graph(params, shards=2, faults=plan, recovery=policy)
+    ig = g.index_graph(
+        params, config=ExecutionConfig(shards=2, faults=plan, recovery=policy))
     _assert_identical(ig, oracle)
     assert plan.fired, "the fault never actually fired"
 
@@ -125,7 +127,8 @@ def test_sharded_unrecoverable_reports(shm_guard):
     plan = FaultPlan(faults=(Fault(kind=WORKER_CRASH, round=2, index=1,
                                    times=99),))
     with pytest.raises(ShardRecoveryError) as ei:
-        g.index_graph(params, shards=2, faults=plan, recovery=FAST_RETRY)
+        g.index_graph(params, config=ExecutionConfig(
+            shards=2, faults=plan, recovery=FAST_RETRY))
     rep = ei.value.report
     assert rep.context == "sharded"
     assert rep.failed and rep.failed[0][0] == (2, 1)
@@ -142,8 +145,8 @@ def test_sharded_hard_crash_in_caller_pool_is_unrecoverable(shm_guard):
     pool = ProcessPoolExecutor(max_workers=2)
     try:
         with pytest.raises(ShardRecoveryError):
-            g.index_graph(params, shards=2, pool=pool, faults=plan,
-                          recovery=FAST_RETRY)
+            g.index_graph(params, config=ExecutionConfig(
+                shards=2, pool=pool, faults=plan, recovery=FAST_RETRY))
     finally:
         pool.shutdown(wait=False)
 
@@ -153,7 +156,8 @@ def test_sharded_faults_without_policy_use_default_retry(shm_guard):
     injection alone never silently disables recovery."""
     g, params, oracle = _graph_and_oracle()
     plan = FaultPlan(faults=(Fault(kind=WORKER_CRASH, round=1, index=0),))
-    ig = g.index_graph(params, shards=2, faults=plan)
+    ig = g.index_graph(params,
+                       config=ExecutionConfig(shards=2, faults=plan))
     _assert_identical(ig, oracle)
     assert plan.fired
 
@@ -163,8 +167,9 @@ def test_sharded_zero_retry_budget_fails_fast(shm_guard):
     g, params, _ = _graph_and_oracle()
     plan = FaultPlan(faults=(Fault(kind=WORKER_CRASH, round=1, index=0),))
     with pytest.raises(ShardRecoveryError) as ei:
-        g.index_graph(params, shards=2, faults=plan,
-                      recovery=RetryPolicy(max_retries=0, base_delay=0.001))
+        g.index_graph(params, config=ExecutionConfig(
+            shards=2, faults=plan,
+            recovery=RetryPolicy(max_retries=0, base_delay=0.001)))
     assert "injected worker crash" in ei.value.report.failed[0][1]
 
 
@@ -328,7 +333,7 @@ def test_device_discover_dropped_decrement_stalls_with_report():
     victim = int(sched.levels[1][0])
     plan = FaultPlan(faults=(Fault(kind=DROPPED_DECREMENT, task=victim),))
     with pytest.raises(StallError) as ei:
-        DeviceExecutor(ig, faults=plan).run()
+        DeviceExecutor(ig, config=ExecutionConfig(faults=plan)).run()
     rep = ei.value.report
     assert rep.context == "device-discover"
     assert victim in rep.undrained
@@ -340,7 +345,7 @@ def test_device_discover_clean_run_ignores_empty_plan():
     g, params, _ = _graph_and_oracle()
     ig, sched = synthesize_indexed(g, params)
     clean = DeviceExecutor(ig).run()
-    fp = DeviceExecutor(ig, faults=FaultPlan()).run()
+    fp = DeviceExecutor(ig, config=ExecutionConfig(faults=FaultPlan())).run()
     assert [np.asarray(a).tolist() for a in fp.levels] == \
            [np.asarray(a).tolist() for a in clean.levels]
 
@@ -354,8 +359,8 @@ def _fuzz_one(seed: int) -> None:
     plan = FaultPlan.random(seed, n_jobs=2,
                             kinds=(WORKER_CRASH, SHM_ATTACH_FAIL))
     try:
-        ig = g.index_graph(params, shards=2, faults=plan,
-                           recovery=FAST_RETRY)
+        ig = g.index_graph(params, config=ExecutionConfig(
+            shards=2, faults=plan, recovery=FAST_RETRY))
     except ShardRecoveryError as e:
         assert not plan.recoverable(FAST_RETRY.max_retries)
         assert e.report.failed

@@ -81,7 +81,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 4
+    assert report["schema_version"] == 5
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
@@ -91,8 +91,30 @@ def test_run_harness_smoke_mode(tmp_path):
     assert {r["shards"] for r in sec["data"]["rows"]} >= {1, 2}
 
 
+def test_service_section_smoke():
+    """The schema-v5 graph-cache section: warm hits verified against the
+    cold products, flagship row present, service stats coalesce
+    (docs/service.md)."""
+    from benchmarks import bench_service
+    lines, out = _collect(bench_service.run, smoke=True)
+    assert any(ln.startswith("case,kind,") for ln in lines)
+    assert out["rows"], "service rows missing"
+    for r in out["rows"]:
+        assert {"case", "kind", "n_tasks", "cold_ms", "warm_ms", "speedup",
+                "sub_ms_warm", "verified"} <= set(r)
+        assert r["verified"] is True
+        assert r["sub_ms_warm"] is True
+        assert r["speedup"] > 1
+    flag = out["flagship"]
+    assert flag["kind"] == "packed" and flag["verified"] is True
+    svc = out["service"]
+    assert svc["cold_fills"] == svc["keys"]      # exactly-once per key
+    assert svc["hit_rate"] > 0.5                 # everything else was warm
+    assert json.dumps(out)
+
+
 def test_faults_section_smoke():
-    """The schema-v4 recovery-overhead section: rows verified, faults
+    """The recovery-overhead section: rows verified, faults
     actually fired, artifact JSON-serializable (docs/robustness.md)."""
     from benchmarks import bench_faults
     lines, out = _collect(bench_faults.run, smoke=True)

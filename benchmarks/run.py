@@ -20,15 +20,20 @@ Sections:
               (incl. the ≥1M-task flagship, sub-ms warm target), plus
               ScheduleService coalescing and warm throughput
               (docs/service.md)
+  fused     — fused stencil execution: the counted sweep computing real
+              tiles, priced per task / per grid point against the
+              decrement-only sweep, the host-dispatch NumPy twin, and
+              the handwritten jax solve (docs/device_exec.md, "Fused
+              execution")
 
 ``--smoke`` runs a fast subset of every section (small suites, no
 subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 5):
+diff perf artifacts across PRs.  Stable schema (version 6):
 
-    {"schema_version": 5, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 6, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
@@ -57,6 +62,14 @@ per product kind (index graph / schedule / packed device columns), a
 hit < 1 ms, ≥50x over cold, arrays verified against an uncached oracle),
 and ``service`` stats from a concurrent ScheduleService burst
 (cold fills, coalesced requests, warm requests/s, hit rate).
+
+New in v6: the ``fused`` section prices end-to-end device-resident
+stencil execution — rows ``{program, path, tasks, points, seconds,
+per_task_us, per_point_ns, vs_handwritten, verified}`` per execution path
+(``path`` in {handwritten, device_replay, fused, fused_novalidate,
+host_dispatch}), numerics verified against the handwritten solve, plus an
+``acceptance`` record for the ≥1M-task flagship asserting the fused
+per-task time does not exceed the decrement-only sweep.
 """
 from __future__ import annotations
 
@@ -72,7 +85,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "compile", "taskgen", "sync", "executor",
-                             "roofline", "faults", "service"])
+                             "roofline", "faults", "service", "fused"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset of each section (sub-minute total)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -80,8 +93,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import (bench_compile, bench_executor, bench_faults,
-                   bench_roofline, bench_service, bench_sync_overheads,
-                   bench_taskgen)
+                   bench_fused, bench_roofline, bench_service,
+                   bench_sync_overheads, bench_taskgen)
 
     sections = {
         "compile": bench_compile.run,
@@ -91,11 +104,12 @@ def main(argv=None) -> int:
         "roofline": bench_roofline.run,
         "faults": bench_faults.run,
         "service": bench_service.run,
+        "fused": bench_fused.run,
     }
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 5, "smoke": bool(args.smoke),
+    report = {"schema_version": 6, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)

@@ -23,7 +23,7 @@ def tpu_compiler_params(**kwargs):
     return cls(**kwargs)
 
 
-def pallas():
+def pallas(required: bool = False):
     """The ``jax.experimental.pallas`` module, or ``None`` when this jax
     build ships without it (minimal CPU wheels, very old releases).
 
@@ -31,10 +31,16 @@ def pallas():
     returns ``None`` instead of wrapping their own try/except — keeping the
     capability check here means one place to fix when the import path moves
     (and tests can monkeypatch this function to simulate a pallas-less jax).
+    ``required=True`` raises instead of returning ``None``, for modules
+    whose whole point is the pallas kernel (``repro.kernels``).
     """
     try:
         from jax.experimental import pallas as pl
     except ImportError:
+        if required:
+            raise RuntimeError(
+                "this jax build has no pallas module; the XLA fallbacks in "
+                "repro.kernels.ref / core.edt.device cover the same ops")
         return None
     return pl
 
@@ -42,6 +48,46 @@ def pallas():
 def has_pallas() -> bool:
     """True when :func:`pallas` resolves — cheap capability probe."""
     return pallas() is not None
+
+
+def pallas_tpu(required: bool = False):
+    """The ``jax.experimental.pallas.tpu`` module (``pltpu``), or ``None``.
+
+    Split from :func:`pallas` because CPU-only wheels have shipped the core
+    pallas package without its TPU backend."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:
+        if required:
+            raise RuntimeError(
+                "this jax build has no pallas TPU backend (pltpu)")
+        return None
+    return pltpu
+
+
+def enable_x64():
+    """Context manager enabling 64-bit jax types for its extent.
+
+    ``jax.experimental.enable_x64`` where available (it scopes the change
+    per-thread instead of flipping global config); otherwise a fallback
+    that toggles ``jax_enable_x64`` and restores it.  Used by the fused
+    executor's float64 paths so test suites never leak x64 state.
+    """
+    try:
+        from jax.experimental import enable_x64 as ctx
+    except ImportError:
+        import contextlib
+
+        @contextlib.contextmanager
+        def ctx():
+            old = jax.config.jax_enable_x64
+            jax.config.update("jax_enable_x64", True)
+            try:
+                yield
+            finally:
+                jax.config.update("jax_enable_x64", old)
+
+    return ctx()
 
 
 def shard_map(f, mesh, in_specs, out_specs, check: bool = False):

@@ -13,6 +13,8 @@ from .executor import Counters, Gauge, Sim
 from .faults import (DROPPED_DECREMENT, SHM_ATTACH_FAIL, TASK_BODY_ERROR,
                      WORKER_CRASH, WORKER_HANG, Fault, FaultPlan,
                      InjectedTaskError)
+from .fused import (FusedExecutor, FusedRun, graph_tile, host_execute,
+                    pack_origins)
 from .recovery import (FailureReport, ResilientRun, RetryPolicy,
                        ScheduleValidationError, ShardRecoveryError,
                        StallError, StallReport, TaskGroupError, Watchdog,
@@ -38,6 +40,8 @@ __all__ = [
     "ShardSpec", "ShardPlan", "plan_shards", "scan_sharded",
     "DeviceExecutor", "DeviceRun", "DeviceCounters", "DeviceGraph",
     "DeviceSchedule", "pack_graph", "pack_schedule",
+    "FusedExecutor", "FusedRun", "pack_origins", "host_execute",
+    "graph_tile",
     "Sim", "Counters", "Gauge",
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",

@@ -8,13 +8,14 @@ canonical polyhedron (``scan_cache_info``) — but every ``index_graph`` /
 :class:`GraphCache` extends the caching one level up: finished graph
 products, keyed by ``(canonical program fingerprint, params)``.
 
-Per key the cache holds up to four products, filled lazily in dependency
+Per key the cache holds up to five products, filled lazily in dependency
 order and each returned by reference on a warm hit:
 
   ``ig``        :class:`~repro.core.edt.taskgraph.IndexedGraph`
   ``schedule``  :class:`~repro.core.edt.wavefront.IndexedSchedule`
   ``dg``        :class:`~repro.core.edt.device.DeviceGraph`  (pack_graph)
   ``ds``        :class:`~repro.core.edt.device.DeviceSchedule` (pack_schedule)
+  ``fo``        fused tile-origin columns (``fused.pack_origins``)
 
 Eviction is LRU over whole entries, bounded by
 :class:`~repro.core.edt.config.CachePolicy` — ``max_entries`` and a hard
@@ -82,6 +83,7 @@ class _Entry:
     schedule: object = None
     dg: object = None
     ds: object = None
+    fo: object = None        # fused tile-origin columns (i32[n+1, ndim])
     bytes: int = field(default=0)
 
 
@@ -231,6 +233,30 @@ class GraphCache:
             ds = pack_schedule(ig, sched)
             ds = self._store(key, params, "ds", ds, _ds_nbytes(ds))
         return dg, ds
+
+    def fused(self, graph, params: dict,
+              cfg: Optional[ExecutionConfig] = None):
+        """``(DeviceGraph, DeviceSchedule, origin columns)`` — everything
+        the fused executor reads, each by reference on a warm hit.
+
+        The origin columns are packed from the cached index graph and the
+        graph's own tile sizes (both already under this entry's
+        fingerprint, which hashes the tilings), so the product needs no
+        extra key material; its bytes count against the entry budget like
+        every other product.
+        """
+        from .fused import graph_tile, pack_origins
+        dg, ds = self.packed(graph, params, cfg)
+        if not self.policy.enabled:
+            ig = self.graph(graph, params, cfg)
+            return dg, ds, pack_origins(ig, graph_tile(graph))
+        key = self._key(graph, params)
+        fo = self._lookup(key, "fo")
+        if fo is None:
+            ig = self.graph(graph, params, cfg)
+            fo = pack_origins(ig, graph_tile(graph))
+            fo = self._store(key, params, "fo", fo, int(fo.nbytes))
+        return dg, ds, fo
 
     # --------------------------------------------------------- incremental
     def _find_donor_locked(self, key: tuple, graph):

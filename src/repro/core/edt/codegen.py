@@ -3,7 +3,10 @@
 The *executable* counterparts live in ``taskgraph.py`` (iterators) and
 ``syncmodels.py`` (runtime behavior); this module renders the same polyhedra
 as human-readable pseudo-C so examples and docs can show exactly what the
-compiler "generates" for each synchronization model.
+compiler "generates" for each synchronization model.  :func:`emit_fused`
+renders the counted model's *fused* device form — counter sweep plus tile
+body in one program — whose executable counterpart is
+:class:`~repro.core.edt.fused.FusedExecutor`.
 """
 from __future__ import annotations
 
@@ -84,4 +87,73 @@ def emit_autodec(graph: TiledTaskGraph) -> str:
                 out.append("  " + line)
             out.append(f"    autodec(tgt, pred_count_{td.dep.tgt})")
     out.append("// master: preschedule(t) for all t — O(1) sequential start-up")
+    return "\n".join(out)
+
+
+def emit_fused(graph: TiledTaskGraph, body: str = None) -> str:
+    """The fused counted-sync device sweep: decrement + tile body, one loop.
+
+    Pseudo-code for what :class:`~repro.core.edt.fused.FusedExecutor`
+    compiles — the level loop of the replay sweep with the stencil body
+    (``repro.kernels.stencils.SPECS``) inlined between the validation
+    gathers and the counter decrement.  ``body`` defaults to the program's
+    registered name.
+    """
+    from ...kernels.stencils import SPECS
+    name = body or getattr(graph.program, "name", "")
+    if name not in SPECS:
+        raise ValueError(f"no stencil body registered for {name!r}; "
+                        f"known: {sorted(SPECS)}")
+    spec = SPECS[name]
+    (tiling,) = graph.tilings.values()
+    tile = tiling.sizes
+    seq = [f"l{k}" for k in range(spec.space) if spec.seq_space[k]]
+    par = [f"l{k}" for k in range(spec.space) if not spec.seq_space[k]]
+    out = [f"// ---- fused counted model: device sweep + {name} body ----",
+           f"// state: u[2*S+1]  (S = N^{spec.space} sites; parity buffers "
+           "p = t & 1,",
+           "//         slot 2S = zero halo; masked writes drop) — "
+           "docs/device_exec.md",
+           "for level in range(depth):                   // one fori_loop, "
+           "never host",
+           "  ids  = order[task_ptr[level] : +w_pad]     // fixed-width "
+           "slice, sentinel-padded",
+           "  chk  = indeg[ids] != 0 if lane < width     // validation (a): "
+           "not ready",
+           "  chk += indeg[next_ids] == 0                // validation (b): "
+           "early ready",
+           "  org  = origin[ids]                         // tile origins "
+           "(t0, x0...)"]
+    steps = " * ".join(str(g) for g in tile)
+    out.append(f"  // tile body: {steps} points/tile, taps={len(spec.taps)}"
+               f" (dt,off,w), seq dims: t{',' if seq else ''}{','.join(seq)}")
+    out.append(f"  for tt in range({tile[0]}):"
+               "                        // local time: sequential")
+    ind = "    "
+    for d in seq:
+        out.append(f"{ind}for {d} in range(g):                     "
+                   "// Gauss-Seidel dim: sequential")
+        ind += "  "
+    if par:
+        out.append(f"{ind}vmap over ({', '.join(par)}):               "
+                   "// parallel spatial lanes")
+        ind += "  "
+    out.append(f"{ind}t, s = org.t + tt, org.x + l - t        "
+               "// unskew: site = x - t")
+    out.append(f"{ind}mask = 0 <= t < T and s in [0, N)^d     "
+               "// = domain membership")
+    for dt, off, w in spec.taps:
+        buf = "p" if dt == 0 else "1-p"
+        out.append(f"{ind}acc += {w:g} * u[{buf}, s + {off}]"
+                   f"{'':<{max(1, 14 - 3 * len(off))}}// dt={dt}, halo reads 0")
+    out.append(f"{ind}u[p, s] = acc if mask                   "
+               "// distinct slots per level (proof: fused.py)")
+    out += ["  // counted-sync decrement: this level's out-edges, one "
+            "contiguous slice",
+            "  tgts = lvl_tgt[edge_ptr[level] : +e_pad]",
+            "  indeg[tgts] -= 1                           // scatter-add, "
+            "slot n swallows pads",
+            "chk += sum(indeg != 0)                       // validation (c): "
+            "undrained",
+            "// chk == 0 proves the schedule IS the counted-model execution"]
     return "\n".join(out)

@@ -214,6 +214,11 @@ class Session:
         """Cached ``(DeviceGraph, DeviceSchedule)`` device columns."""
         return self.cache.packed(graph, params, self.runtime_config())
 
+    def fused_packed(self, graph, params: dict):
+        """Cached ``(DeviceGraph, DeviceSchedule, origin columns)`` for the
+        fused executor — a warm hit packs nothing."""
+        return self.cache.fused(graph, params, self.runtime_config())
+
     def materialize(self, graph, params: dict):
         """Uncached dict-graph materialization under the session config."""
         return graph._materialize_cfg(params, self.runtime_config())
@@ -247,3 +252,17 @@ class Session:
         dg = self.cache.packed_graph(graph, params, self.runtime_config())
         return DeviceExecutor(ig, packed=(dg, None), use_pallas=use_pallas,
                               interpret=interpret)
+
+    def fused_executor(self, graph, params: dict, *, replay: bool = True,
+                       **kw):
+        """A :class:`~repro.core.edt.fused.FusedExecutor` over the cached
+        fused packed arrays (body/tile inferred from the graph; ``kw``
+        forwards ``state=``/``dtype=``/``validate=``/``use_pallas=``...).
+        """
+        from .fused import FusedExecutor, graph_tile
+        ig = self.index_graph(graph, params)
+        dg, ds, fo = self.fused_packed(graph, params)
+        kw.setdefault("body", getattr(graph.program, "name", "") or None)
+        kw.setdefault("tile", graph_tile(graph))
+        return FusedExecutor(ig, params,
+                             packed=(dg, ds if replay else None, fo), **kw)

@@ -98,6 +98,12 @@ class DeviceSchedule:
     level, ``e_pad``-padded likewise — a level's out-edges are the slice
     ``[edge_ptr[l], edge_ptr[l+1])``, so the whole sweep touches each edge
     once.
+
+    ``origin`` (optional, set by the fused executor's packing) carries the
+    per-task tile-origin columns — row ``t`` is task ``t``'s iteration-space
+    origin (tile coords × tile sizes), with a sentinel row at index ``n``
+    whose negative time coordinate masks padded lanes; see
+    :func:`~repro.core.edt.fused.pack_origins`.
     """
 
     depth: int
@@ -109,6 +115,7 @@ class DeviceSchedule:
     edge_ptr: "np.ndarray"   # i32[depth+1]
     levels: list             # the source IndexedSchedule levels (int64 ids)
     level_of: "np.ndarray"   # int64[n]
+    origin: Optional["np.ndarray"] = None   # i32[n+1, ndim] tile origins
 
 
 def pack_graph(ig: IndexedGraph) -> DeviceGraph:
@@ -129,8 +136,14 @@ def pack_graph(ig: IndexedGraph) -> DeviceGraph:
                        pred_n=ig.pred_n.astype(np.int32))
 
 
-def pack_schedule(ig: IndexedGraph, schedule: IndexedSchedule) -> DeviceSchedule:
-    """Level-major task and edge columns for the O(V+E) replay sweep."""
+def pack_schedule(ig: IndexedGraph, schedule: IndexedSchedule,
+                  origins: Optional["np.ndarray"] = None) -> DeviceSchedule:
+    """Level-major task and edge columns for the O(V+E) replay sweep.
+
+    ``origins`` (from :func:`~repro.core.edt.fused.pack_origins`) attaches
+    the fused executor's tile-origin columns so one packed object carries
+    everything the fused replay sweep reads.
+    """
     n = ig.n
     if max(n, ig.n_edges) >= _I32_MAX:
         raise ValueError(
@@ -161,7 +174,7 @@ def pack_schedule(ig: IndexedGraph, schedule: IndexedSchedule) -> DeviceSchedule
         lvl_tgt=np.concatenate([ig.edge_tgt[eorder].astype(np.int32),
                                 np.full(e_pad, sent, np.int32)]),
         edge_ptr=edge_ptr,
-        levels=schedule.levels, level_of=schedule.level_of)
+        levels=schedule.levels, level_of=schedule.level_of, origin=origins)
 
 
 # ----------------------------------------------------------- decrement step

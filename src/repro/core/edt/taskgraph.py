@@ -127,6 +127,10 @@ class PolyhedralProgram:
     statements: dict[str, Statement] = field(default_factory=dict)
     dependences: list[Dependence] = field(default_factory=list)
     param_names: tuple[str, ...] = ()
+    # registry name (``repro.core.programs.PROGRAMS`` key) — lets consumers
+    # that attach semantics to a program (the fused executor's stencil
+    # bodies) find it without threading the name separately
+    name: str = ""
 
     def add_statement(self, name: str, domain: Polyhedron) -> Statement:
         st = Statement(name, domain)

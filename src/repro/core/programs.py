@@ -278,7 +278,19 @@ def synthetic_highdim(nd: int = 5) -> PolyhedralProgram:
     return P
 
 
-PROGRAMS = {
+def _named(name: str, build):
+    """Stamp the registry key onto the built program (kept in one place so
+    ``PolyhedralProgram.name`` can never drift from the PROGRAMS key —
+    the fused executor resolves stencil bodies through it)."""
+    def builder() -> PolyhedralProgram:
+        p = build()
+        p.name = name
+        return p
+    builder.__name__ = getattr(build, "__name__", name)
+    return builder
+
+
+PROGRAMS = {name: _named(name, fn) for name, fn in {
     "stencil1d": stencil1d,
     "seidel1d": seidel1d,
     "jacobi2d": jacobi2d,
@@ -291,4 +303,4 @@ PROGRAMS = {
     "embarrassing": embarrassing,
     "synthetic5d": lambda: synthetic_highdim(5),
     "synthetic6d": lambda: synthetic_highdim(6),
-}
+}.items()}

@@ -1,4 +1,23 @@
-"""Pallas TPU kernels (validated on CPU in interpret mode vs ref.py oracles)."""
-from . import ops, ref
+"""Pallas TPU kernels (validated on CPU in interpret mode vs ref.py oracles).
 
-__all__ = ["ops", "ref"]
+Submodules load lazily (PEP 562): ``stencils`` is imported by the fused
+device executor from process-pool workers that must stay jax-free, while
+``ops``/``flash_attention``/``ssd``/``wkv6`` pull in jax + pallas — an
+eager ``from . import ops`` here would defeat the deferred-import
+discipline ``core.edt.device`` keeps.
+"""
+import importlib
+
+_SUBMODULES = ("flash_attention", "ops", "ref", "ssd", "stencils", "wkv6")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

@@ -15,10 +15,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from ..compat import tpu_compiler_params
+from ..compat import pallas, pallas_tpu, tpu_compiler_params
+
+# resolved at import so a pallas-less jax fails here, not mid-call; the
+# version shim (and its test monkeypatch point) lives in compat
+pl = pallas(required=True)
+pltpu = pallas_tpu(required=True)
 
 
 def _kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, s0_ref,

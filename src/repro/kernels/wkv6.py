@@ -20,10 +20,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from ..compat import tpu_compiler_params
+from ..compat import pallas, pallas_tpu, tpu_compiler_params
+
+# resolved at import so a pallas-less jax fails here, not mid-call; the
+# version shim (and its test monkeypatch point) lives in compat
+pl = pallas(required=True)
+pltpu = pallas_tpu(required=True)
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,

@@ -23,9 +23,11 @@ import pathlib
 import pytest
 
 from repro.core.edt import TiledTaskGraph
-from repro.core.edt.codegen import emit_autodec, emit_prescribed, emit_tags
+from repro.core.edt.codegen import (emit_autodec, emit_fused,
+                                    emit_prescribed, emit_tags)
 from repro.core.poly import Tiling
 from repro.core.programs import PROGRAMS
+from repro.kernels.stencils import SPECS
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
 CASES = {"diamond": (1, 1), "stencil1d": (2, 4)}
@@ -33,12 +35,15 @@ CASES = {"diamond": (1, 1), "stencil1d": (2, 4)}
 
 def _render(name: str) -> str:
     g = TiledTaskGraph(PROGRAMS[name](), {"S": Tiling(CASES[name])})
-    return "\n".join([
+    parts = [
         emit_prescribed(g), "",
         emit_tags(g, method=2), "",
         emit_tags(g, method=1), "",
         emit_autodec(g), "",
-    ])
+    ]
+    if name in SPECS:   # fused form exists only for programs with a body
+        parts += [emit_fused(g), ""]
+    return "\n".join(parts)
 
 
 @pytest.mark.parametrize("name", sorted(CASES))
@@ -69,3 +74,22 @@ def test_autodec_reports_both_strategies():
     assert set(s.pred_count_strategies().values()) == {"loop"}
     assert "closed_form" in emit_autodec(d)
     assert "n++;" in emit_autodec(s)
+
+
+def test_fused_emitter_requires_a_body():
+    """Programs with no registered stencil body have no fused form."""
+    d = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling(CASES["diamond"])})
+    with pytest.raises(ValueError, match="no stencil body"):
+        emit_fused(d)
+
+
+def test_fused_emitter_reflects_the_spec():
+    """Sequential dims render as loops, parallel dims as vmap, and every
+    tap of the body appears with its parity buffer."""
+    s = TiledTaskGraph(PROGRAMS["seidel1d"](),
+                       {"S": Tiling(CASES["stencil1d"])})
+    text = emit_fused(s)
+    assert "Gauss-Seidel dim: sequential" in text
+    assert text.count("acc +=") == len(SPECS["seidel1d"].taps)
+    assert "u[p, s + (-1,)]" in text      # dt=0 tap reads the same parity
+    assert "u[1-p, s + (1,)]" in text     # dt=1 tap reads the other parity

@@ -1,0 +1,373 @@
+"""Fused-execution suite: the counted-sync sweep computing real tiles.
+
+The ladder of trust, bottom to top:
+
+* :func:`reference_solve` — time-major NumPy, the ground truth;
+* :func:`host_execute` — the *level-major* NumPy twin of the fused sweep
+  (same tiles, same masking, same level order), proven **bitwise** equal
+  to the reference — this is the argument that wavefront leveling
+  linearizes every buffer hazard;
+* :class:`FusedExecutor` replay and discover — the device sweeps, matched
+  to the reference within documented tolerances (float32: rtol 1e-5 /
+  atol 1e-6, observed ~1 ULP from XLA reassociation; float64: rtol 1e-12,
+  observed ~1e-16) and to the host schedule frontiers **byte for byte**;
+* :func:`handwritten_solve` — the no-task-graph jax baseline, agreeing
+  with the reference under the same float32 tolerance.
+
+Plus the failure modes (wrong body/tile/dtype, schedule-vs-packed
+conflicts, dropped decrements stalling the fused discover sweep), the
+graph-cache ``fused`` product, and the ≥1M-task jacobi2d acceptance run.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ProcessPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core.edt import (CachePolicy, ExecutionConfig, FusedExecutor,
+                            GraphCache, Session, TiledTaskGraph,
+                            graph_tile, host_execute, pack_origins,
+                            simulate_indexed, synthesize_indexed)
+from repro.core.edt.fused import SENTINEL_ORIGIN
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+from repro.kernels.stencils import (SPECS, default_state, handwritten_solve,
+                                    reference_solve)
+
+#: (program, tile sizes, params) — every stencil body, small enough that
+#: the sequential reference loop stays fast, big enough for partial tiles
+#: (extents not multiples of tile sizes) and several wavefronts.
+CASES = [
+    ("stencil1d", (2, 2), {"T": 6, "N": 15}),
+    ("jacobi2d", (2, 2, 2), {"T": 5, "N": 11}),
+    ("heat3d", (2, 2, 2, 2), {"T": 3, "N": 7}),
+    ("seidel1d", (2, 3), {"T": 6, "N": 14}),
+]
+
+F32_TOL = dict(rtol=1e-5, atol=1e-6)    # observed ~1 ULP (6e-8)
+F64_TOL = dict(rtol=1e-12, atol=1e-13)  # observed ~1e-16
+
+
+@pytest.fixture(scope="module")
+def pool():
+    p = ProcessPoolExecutor(max_workers=2)
+    p.submit(int, 0).result()
+    yield p
+    p.shutdown()
+
+
+def _graph(name, tiles):
+    return TiledTaskGraph(PROGRAMS[name](), {"S": Tiling(tiles)},
+                          backend="numpy")
+
+
+# ===================================================== numerics ladder
+@pytest.mark.parametrize("name,tiles,params", CASES)
+def test_host_execute_bitwise_equals_reference(name, tiles, params):
+    """Level-major tile execution == time-major execution, bit for bit:
+    the wavefront levels linearize every parity-buffer hazard."""
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    state = default_state(spec, params["N"], np.float32)
+    got = host_execute(spec, tiles, params["T"], params["N"],
+                       pack_origins(ig, tiles), sched.levels, state)
+    want = reference_solve(spec, state, params["T"])
+    assert got.dtype == want.dtype
+    assert np.array_equal(got, want), name
+
+
+@pytest.mark.parametrize("name,tiles,params", CASES)
+@pytest.mark.parametrize("mode", ["replay", "discover"])
+def test_fused_matches_reference_f32(name, tiles, params, mode):
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    state = default_state(spec, params["N"], np.float32)
+    ex = FusedExecutor(ig, params, body=name, tile=tiles,
+                       schedule=sched if mode == "replay" else None,
+                       state=state)
+    run = ex.run()
+    assert run.mode == mode
+    want = reference_solve(spec, state, params["T"])
+    np.testing.assert_allclose(run.final, want, **F32_TOL)
+    # the non-answer parity buffer holds v_{T-2}
+    if params["T"] >= 2:
+        np.testing.assert_allclose(
+            run.state[(params["T"] - 2) & 1],
+            reference_solve(spec, state, params["T"] - 1), **F32_TOL)
+
+
+@pytest.mark.parametrize("name,tiles,params", CASES)
+def test_fused_matches_reference_f64(name, tiles, params):
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    state = default_state(spec, params["N"], np.float64)
+    want = reference_solve(spec, state, params["T"])
+    with compat.enable_x64():
+        for sched_arg in (sched, None):
+            run = FusedExecutor(ig, params, body=name, tile=tiles,
+                                schedule=sched_arg, state=state).run()
+            np.testing.assert_allclose(run.final, want, **F64_TOL)
+
+
+@pytest.mark.parametrize("name,tiles,params", CASES)
+def test_handwritten_baseline_agrees(name, tiles, params):
+    """The bench_fused baseline solves the same problem (so the priced
+    comparison is apples to apples)."""
+    spec = SPECS[name]
+    state = default_state(spec, params["N"], np.float32)
+    got = handwritten_solve(spec, state, params["T"])
+    want = reference_solve(spec, state, params["T"])
+    np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+def test_fused_custom_state_and_rerun():
+    """run(state=) reuses the compiled sweep on fresh data."""
+    name, tiles, params = CASES[0]
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    ex = FusedExecutor(g, params)      # body/tile inferred from the graph
+    s1 = default_state(spec, params["N"], np.float32)
+    s2 = np.asarray(s1[::-1])
+    np.testing.assert_allclose(ex.run(s1).final,
+                               reference_solve(spec, s1, params["T"]),
+                               **F32_TOL)
+    np.testing.assert_allclose(ex.run(s2).final,
+                               reference_solve(spec, s2, params["T"]),
+                               **F32_TOL)
+
+
+def test_zero_step_run_returns_initial_state():
+    name, tiles, _ = CASES[0]
+    spec = SPECS[name]
+    state = default_state(spec, 9, np.float32)
+    run = FusedExecutor(_graph(name, tiles), {"T": 0, "N": 9},
+                        state=state).run()
+    assert run.levels == [] and run.counters.depth == 0
+    assert np.array_equal(run.final, state)
+
+
+# ================================================== frontier identity
+@pytest.mark.parametrize("name,tiles,params", CASES)
+def test_fused_frontiers_byte_identical(name, tiles, params):
+    """Both fused modes walk exactly the host schedule's frontiers — the
+    compute never perturbs the counter sweep."""
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    runs = {
+        "replay": FusedExecutor(ig, params, body=name, tile=tiles,
+                                schedule=sched).run(),
+        "discover": FusedExecutor(ig, params, body=name, tile=tiles).run(),
+    }
+    host_order = simulate_indexed(sched, workers=3).exec_order
+    for label, run in runs.items():
+        assert len(run.levels) == sched.depth, label
+        for dev_lv, host_lv in zip(run.levels, sched.levels):
+            assert dev_lv.dtype == host_lv.dtype, label
+            assert np.array_equal(dev_lv, host_lv), label
+        assert np.array_equal(run.level_of, sched.level_of), label
+        assert run.exec_order.tolist() == host_order, label
+        c = run.counters
+        assert c.tasks_started == c.tasks_finished == ig.n, label
+        assert c.depth == sched.depth, label
+        assert c.max_in_flight == sched.max_width, label
+
+
+def test_validate_false_same_answer():
+    """Dropping the three violation counters changes nothing numeric."""
+    name, tiles, params = CASES[1]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    a = FusedExecutor(ig, params, body=name, tile=tiles,
+                      schedule=sched).run()
+    b = FusedExecutor(ig, params, body=name, tile=tiles, schedule=sched,
+                      validate=False).run()
+    assert np.array_equal(a.final, b.final)
+    assert np.array_equal(a.level_of, b.level_of)
+
+
+def test_replay_rejects_corrupt_schedule():
+    """The fused replay keeps the device executor's validation teeth."""
+    from repro.core.edt import ScheduleValidationError
+    from repro.core.edt.wavefront import IndexedSchedule, levels_from_array
+    name, tiles, params = CASES[0]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    lv = sched.level_of.copy()
+    lv[sched.levels[1][0]] += 2
+    bad = IndexedSchedule(levels=levels_from_array(lv), level_of=lv)
+    with pytest.raises(ScheduleValidationError):
+        FusedExecutor(ig, params, body=name, tile=tiles, schedule=bad).run()
+
+
+def test_dropped_decrement_stalls_fused_discover():
+    """A dropped decrement (PR-6 fault plan) deadlocks the fused sweep
+    loudly, with the structured stall report naming the context."""
+    from repro.core.edt import Fault, FaultPlan, StallError
+    from repro.core.edt.faults import DROPPED_DECREMENT
+    name, tiles, params = CASES[0]
+    g = _graph(name, tiles)
+    plan = FaultPlan([Fault(DROPPED_DECREMENT, task=3)])
+    ex = FusedExecutor(g, params, config=ExecutionConfig(faults=plan))
+    with pytest.raises(StallError) as ei:
+        ex.run()
+    assert ei.value.report.context == "fused-discover"
+
+
+# ======================================================= construction
+def test_packed_layout_and_sentinel():
+    name, tiles, params = CASES[1]
+    g = _graph(name, tiles)
+    ig = g.index_graph(params)
+    fo = pack_origins(ig, tiles)
+    assert fo.shape == (ig.n + 1, len(tiles)) and fo.dtype == np.int32
+    assert (fo[-1] == SENTINEL_ORIGIN).all()
+    _, coords = ig.stmt_blocks[0]
+    assert np.array_equal(fo[:-1], coords * np.asarray(tiles))
+    assert graph_tile(g) == tiles
+
+
+def test_constructor_rejects_bad_inputs():
+    name, tiles, params = CASES[0]
+    g = _graph(name, tiles)
+    ig, sched = synthesize_indexed(g, params)
+    with pytest.raises(TypeError, match="params required"):
+        FusedExecutor(g)
+    with pytest.raises(TypeError, match="tile="):
+        FusedExecutor(ig, params, body=name)
+    with pytest.raises(TypeError, match="body="):
+        FusedExecutor(ig, params, tile=tiles)
+    with pytest.raises(TypeError, match="unknown stencil body"):
+        FusedExecutor(ig, params, body="nope", tile=tiles)
+    with pytest.raises(ValueError, match="tile dims"):
+        FusedExecutor(ig, params, body=name, tile=(2, 2, 2))
+    with pytest.raises(TypeError, match="not both"):
+        FusedExecutor(ig, params, body=name, tile=tiles, schedule=sched,
+                      packed=(None, None, None))
+    with pytest.raises(TypeError, match="discover sweep only"):
+        FusedExecutor(ig, params, body=name, tile=tiles, schedule=sched,
+                      use_pallas=True)
+    with pytest.raises(ValueError, match="state shape"):
+        FusedExecutor(ig, params, body=name, tile=tiles,
+                      state=np.zeros((3, 3), np.float32))
+    # multi-statement graphs have no single tile body
+    from repro.core.edt import IndexedGraph
+    two = IndexedGraph(
+        stmt_blocks=[("A", np.zeros((1, 2), np.int64)),
+                     ("B", np.zeros((1, 2), np.int64))],
+        n=2, edge_src=np.zeros(0, np.int64), edge_tgt=np.zeros(0, np.int64),
+        pred_n=np.zeros(2, np.int64))
+    with pytest.raises(ValueError, match="single-statement"):
+        pack_origins(two, tiles)
+    with pytest.raises(ValueError, match="do not match"):
+        pack_origins(ig, (2, 2, 2))
+
+
+def test_f64_without_x64_raises():
+    import jax
+    if jax.config.jax_enable_x64:          # pragma: no cover - env guard
+        pytest.skip("suite running under global x64")
+    name, tiles, params = CASES[0]
+    ex = FusedExecutor(_graph(name, tiles), params, dtype=np.float64)
+    with pytest.raises(RuntimeError, match="enable_x64"):
+        ex.run()
+
+
+def test_fused_discover_pallas_interpret():
+    """The pallas decrement composes with the fused compute (interpret
+    mode on this CPU container)."""
+    if not compat.has_pallas():            # pragma: no cover - env guard
+        pytest.skip("jax build has no pallas")
+    name, tiles, params = CASES[0]
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    state = default_state(spec, params["N"], np.float32)
+    run = FusedExecutor(g, params, state=state, use_pallas=True,
+                        interpret=True).run()
+    np.testing.assert_allclose(
+        run.final, reference_solve(spec, state, params["T"]), **F32_TOL)
+
+
+# ============================================================== cache
+def test_cache_fused_product_warm_by_reference():
+    g = _graph("jacobi2d", (2, 2, 2))
+    params = {"T": 4, "N": 10}
+    cache = GraphCache(CachePolicy(incremental=False))
+    cold = cache.fused(g, params)
+    warm = cache.fused(g, params)
+    for a, b in zip(cold, warm):
+        assert a is b
+    # the ig and tile are under the same fingerprint: bytes accounted
+    assert cache.info()["bytes"] >= cold[2].nbytes
+
+
+def test_cache_fused_respects_byte_budget():
+    """The fo product participates in LRU eviction like the others."""
+    g = _graph("stencil1d", (2, 2))
+    budget = 30_000
+    cache = GraphCache(CachePolicy(max_entries=64, max_bytes=budget,
+                                   incremental=False))
+    for n in range(8, 40, 2):
+        cache.fused(g, {"T": 6, "N": n})
+        assert cache.info()["bytes"] <= budget
+    assert cache.info()["evictions"] > 0
+
+
+def test_cache_disabled_fused_pass_through():
+    g = _graph("stencil1d", (2, 2))
+    cache = GraphCache(CachePolicy(enabled=False))
+    a = cache.fused(g, {"T": 4, "N": 10})
+    b = cache.fused(g, {"T": 4, "N": 10})
+    assert a[2] is not b[2]
+    assert np.array_equal(a[2], b[2])
+    assert cache.info()["entries"] == 0
+
+
+def test_session_fused_executor_end_to_end():
+    """Session.fused_executor: warm products, correct numerics, both
+    modes, and the packed arrays come back by reference."""
+    name, tiles, params = CASES[1]
+    spec = SPECS[name]
+    g = _graph(name, tiles)
+    with Session() as s:
+        run = s.fused_executor(g, params).run()
+        state = default_state(spec, params["N"], np.float32)
+        np.testing.assert_allclose(
+            run.final, reference_solve(spec, state, params["T"]), **F32_TOL)
+        d = s.fused_executor(g, params, replay=False).run()
+        assert d.mode == "discover"
+        assert np.array_equal(d.final, run.final)
+        p1 = s.fused_packed(g, params)
+        p2 = s.fused_packed(g, params)
+        for a, b in zip(p1, p2):
+            assert a is b
+
+
+# ========================================================== at scale
+def test_million_task_jacobi2d_fused_acceptance(pool):
+    """The ISSUE acceptance run: a ≥1M-task jacobi2d solve end to end on
+    the fused executor — schedule validated on device, frontiers
+    byte-identical to the host schedule, numerics within the documented
+    float32 tolerance of the handwritten jax solve of the same problem
+    (the full sequential NumPy reference is priced out at this size; the
+    handwritten baseline is itself reference-checked at small sizes
+    above)."""
+    g = _graph("jacobi2d", (2, 2, 2))
+    params = {"T": 32, "N": 512}
+    ig, sched = synthesize_indexed(
+        g, params, config=ExecutionConfig(shards=2, pool=pool))
+    assert ig.n >= 1_000_000
+    spec = SPECS["jacobi2d"]
+    state = default_state(spec, params["N"], np.float32)
+    run = FusedExecutor(ig, params, body="jacobi2d", tile=(2, 2, 2),
+                        schedule=sched, state=state).run()   # validates
+    assert run.counters.tasks_finished == ig.n
+    assert run.counters.depth == sched.depth
+    for dev_lv, host_lv in zip(run.levels, sched.levels):
+        assert np.array_equal(dev_lv, host_lv)
+    want = handwritten_solve(spec, state, params["T"])
+    np.testing.assert_allclose(run.final, want, rtol=1e-4, atol=1e-5)

@@ -81,7 +81,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 5
+    assert report["schema_version"] == 6
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
@@ -110,6 +110,27 @@ def test_service_section_smoke():
     svc = out["service"]
     assert svc["cold_fills"] == svc["keys"]      # exactly-once per key
     assert svc["hit_rate"] > 0.5                 # everything else was warm
+    assert json.dumps(out)
+
+
+def test_fused_section_smoke():
+    """The schema-v6 fused-execution section: every path priced per task
+    and per point, numerics verified against the handwritten solve
+    (docs/device_exec.md, "Fused execution")."""
+    from benchmarks import bench_fused
+    lines, out = _collect(bench_fused.run, smoke=True)
+    assert any(ln.startswith("program,path,") for ln in lines)
+    assert out["rows"], "fused rows missing"
+    paths = {r["path"] for r in out["rows"]}
+    assert {"handwritten", "device_replay", "fused", "fused_novalidate",
+            "host_dispatch"} <= paths
+    for r in out["rows"]:
+        assert {"program", "path", "tasks", "points", "seconds",
+                "per_task_us", "per_point_ns", "vs_handwritten",
+                "verified"} <= set(r)
+        assert r["verified"] is True
+    # the acceptance record only exists on the full flagship run
+    assert out["acceptance"] is None
     assert json.dumps(out)
 
 

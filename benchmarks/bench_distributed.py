@@ -1,0 +1,93 @@
+"""Distributed counted-sync execution: per-rank task rate, message volume.
+
+The distributed runtime (``docs/distributed.md``) claims the rank-owned
+counter sweep keeps the single-host per-task cost while crossing the
+process boundary only on true cross-rank dependence edges.  This benchmark
+prices that claim on the jacobi2d flagship: for each (ranks, transport) it
+runs the full message-decrement execution, verifies the merged frontiers
+byte-identical to the single-host ``schedule_from_graph`` oracle, and
+records
+
+* end-to-end ``per_task_us`` (partition + sweep + merge, the number
+  comparable to the ``executor``/``fused`` dispatch rows),
+* cross-rank message volume — ``msgs`` (decrements carried), ``batches``
+  (active messages sent), ``cross_frac`` (fraction of all edges that left
+  their rank), and
+* a ``per_rank`` breakdown ``{rank, n_local, started, msgs_out, msgs_in,
+  per_task_us}`` exposing ownership imbalance.
+
+Rows feed the ``distributed`` section of ``benchmarks/run.py``
+(schema v7).  Smoke mode shrinks the graph and skips the process
+transport; the full run covers the ≥1M-task flagship at 1/2/4 ranks on
+both transports.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.edt import (TiledTaskGraph, partition_graph, run_distributed,
+                            schedule_from_graph)
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+
+def _rank_rows(run) -> list:
+    rows = []
+    for s in run.rank_stats:
+        rows.append({
+            "rank": s.rank, "n_local": s.n_local, "started": s.started,
+            "supersteps": s.supersteps,
+            "msgs_out": s.msgs_out, "msgs_in": s.msgs_in,
+            "batches_out": s.batches_out,
+            "per_task_us": round(s.seconds / max(1, s.started) * 1e6, 3),
+        })
+        assert s.started == s.n_local
+    return rows
+
+
+def run(emit=print, smoke: bool = False):
+    params = {"T": 8, "N": 48} if smoke else {"T": 32, "N": 512}
+    g = TiledTaskGraph(PROGRAMS["jacobi2d"](), {"S": Tiling((2, 2, 2))},
+                       backend="compiled")
+    t0 = time.time()
+    ig = g.index_graph(params)
+    sched = schedule_from_graph(ig)
+    build_s = time.time() - t0
+    emit(f"# distributed sweep: jacobi2d {params} -> {ig.n} tasks, "
+         f"{ig.n_edges} edges (built in {build_s:.1f}s)")
+    emit("ranks,transport,seconds,per_task_us,msgs,batches,cross_frac,"
+         "verified")
+    configs = [(1, "inline"), (2, "inline"), (4, "inline")]
+    if not smoke:
+        configs += [(2, "processes"), (4, "processes")]
+    rows = []
+    for ranks, transport in configs:
+        cross = sum(int(sl.r_tgt.size) for sl in partition_graph(ig, ranks))
+        t0 = time.time()
+        r = run_distributed(ig, ranks=ranks, engine="numpy",
+                            transport=transport, timeout=300.0)
+        dt = time.time() - t0
+        ok = (r.level_of.tobytes() == sched.level_of.tobytes()
+              and r.depth == sched.depth)
+        s = r.summary()
+        assert s["msgs"] == cross      # every cross edge messaged once
+        row = {
+            "program": "jacobi2d", "tasks": ig.n, "ranks": ranks,
+            "engine": "numpy", "transport": transport,
+            "seconds": round(dt, 4),
+            "per_task_us": round(dt / max(1, ig.n) * 1e6, 3),
+            "msgs": s["msgs"], "batches": s["batches"],
+            "cross_frac": round(cross / max(1, ig.n_edges), 4),
+            "attempts": s["attempts"],
+            "per_rank": _rank_rows(r),
+            "verified": ok,
+        }
+        rows.append(row)
+        emit(f"{ranks},{transport},{row['seconds']},{row['per_task_us']},"
+             f"{row['msgs']},{row['batches']},{row['cross_frac']},{ok}")
+        if not ok:
+            raise AssertionError(
+                f"distributed frontiers diverged at ranks={ranks} "
+                f"transport={transport}")
+    return {"rows": rows, "build_seconds": round(build_s, 3),
+            "tasks": ig.n, "edges": ig.n_edges}

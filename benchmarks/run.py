@@ -25,15 +25,20 @@ Sections:
               decrement-only sweep, the host-dispatch NumPy twin, and
               the handwritten jax solve (docs/device_exec.md, "Fused
               execution")
+  distributed — rank-partitioned counted-sync execution: per-rank task
+              rate and cross-rank message volume on the ≥1M-task
+              flagship, inline and process transports, frontiers
+              verified byte-identical to the single-host sweep
+              (docs/distributed.md)
 
 ``--smoke`` runs a fast subset of every section (small suites, no
 subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 6):
+diff perf artifacts across PRs.  Stable schema (version 7):
 
-    {"schema_version": 6, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 7, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
@@ -70,6 +75,13 @@ per_task_us, per_point_ns, vs_handwritten, verified}`` per execution path
 host_dispatch}), numerics verified against the handwritten solve, plus an
 ``acceptance`` record for the ≥1M-task flagship asserting the fused
 per-task time does not exceed the decrement-only sweep.
+
+New in v7: the ``distributed`` section prices the rank-partitioned
+runtime — rows ``{program, tasks, ranks, engine, transport, seconds,
+per_task_us, msgs, batches, cross_frac, attempts, per_rank, verified}``
+where ``per_rank`` breaks out each rank's task count, message traffic and
+µs/task, and every row's merged frontiers are verified byte-identical to
+the single-host sweep before it is recorded.
 """
 from __future__ import annotations
 
@@ -85,16 +97,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "compile", "taskgen", "sync", "executor",
-                             "roofline", "faults", "service", "fused"])
+                             "roofline", "faults", "service", "fused",
+                             "distributed"])
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset of each section (sub-minute total)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results to PATH")
     args = ap.parse_args(argv)
 
-    from . import (bench_compile, bench_executor, bench_faults,
-                   bench_fused, bench_roofline, bench_service,
-                   bench_sync_overheads, bench_taskgen)
+    from . import (bench_compile, bench_distributed, bench_executor,
+                   bench_faults, bench_fused, bench_roofline,
+                   bench_service, bench_sync_overheads, bench_taskgen)
 
     sections = {
         "compile": bench_compile.run,
@@ -105,11 +118,12 @@ def main(argv=None) -> int:
         "faults": bench_faults.run,
         "service": bench_service.run,
         "fused": bench_fused.run,
+        "distributed": bench_distributed.run,
     }
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 6, "smoke": bool(args.smoke),
+    report = {"schema_version": 7, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)

@@ -8,10 +8,15 @@ migration section); the per-call ``shards=``/``parallel=``/``pool=``/
 from .cache import GraphCache, graph_cache_info
 from .config import CachePolicy, ExecutionConfig, Session
 from .device import (DeviceCounters, DeviceExecutor, DeviceGraph, DeviceRun,
-                     DeviceSchedule, pack_graph, pack_schedule)
+                     DeviceSchedule, make_pallas_step, make_xla_step,
+                     pack_graph, pack_schedule)
+from .distributed import (DistributedRun, Mailbox, MsgBatch, RankEngine,
+                          RankFailureError, RankSlice, RankStats,
+                          partition_graph, plan_ranks, run_distributed)
 from .executor import Counters, Gauge, Sim
-from .faults import (DROPPED_DECREMENT, SHM_ATTACH_FAIL, TASK_BODY_ERROR,
-                     WORKER_CRASH, WORKER_HANG, Fault, FaultPlan,
+from .faults import (DROPPED_DECREMENT, MESSAGE_LOSS, RANK_CRASH,
+                     SHM_ATTACH_FAIL, TASK_BODY_ERROR, WORKER_CRASH,
+                     WORKER_HANG, Fault, FaultPlan, InjectedRankCrash,
                      InjectedTaskError)
 from .fused import (FusedExecutor, FusedRun, graph_tile, host_execute,
                     pack_origins)
@@ -40,6 +45,10 @@ __all__ = [
     "ShardSpec", "ShardPlan", "plan_shards", "scan_sharded",
     "DeviceExecutor", "DeviceRun", "DeviceCounters", "DeviceGraph",
     "DeviceSchedule", "pack_graph", "pack_schedule",
+    "make_xla_step", "make_pallas_step",
+    "run_distributed", "DistributedRun", "RankEngine", "RankSlice",
+    "RankStats", "RankFailureError", "Mailbox", "MsgBatch",
+    "plan_ranks", "partition_graph",
     "FusedExecutor", "FusedRun", "pack_origins", "host_execute",
     "graph_tile",
     "Sim", "Counters", "Gauge",
@@ -48,9 +57,9 @@ __all__ = [
     "run_autodec", "run_autodec_nosrc",
     "ThreadedAutodec", "run_graph_threaded", "run_graph_threaded_resilient",
     "ThreadedRunResult",
-    "Fault", "FaultPlan", "InjectedTaskError",
+    "Fault", "FaultPlan", "InjectedTaskError", "InjectedRankCrash",
     "WORKER_CRASH", "WORKER_HANG", "SHM_ATTACH_FAIL", "TASK_BODY_ERROR",
-    "DROPPED_DECREMENT",
+    "DROPPED_DECREMENT", "RANK_CRASH", "MESSAGE_LOSS",
     "RetryPolicy", "FailureReport", "StallReport", "StallError",
     "ShardRecoveryError", "TaskGroupError", "ScheduleValidationError",
     "Watchdog", "poisoned_cone", "simulate_indexed_resilient", "ResilientRun",

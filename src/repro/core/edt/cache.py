@@ -57,8 +57,42 @@ from .config import CachePolicy, ExecutionConfig
 _CACHES: "weakref.WeakSet" = weakref.WeakSet()
 
 
+def _norm_value(name, value):
+    """One param value, normalized to a plain Python scalar.
+
+    ``{"N": np.int64(512)}`` (a sharded merge), ``{"N": 512}`` (a direct
+    call), and the JSON-parsed values ``edt_serve`` feeds in must all land
+    on ONE cache entry — so numpy scalars collapse to their Python
+    equivalents before keying.  Unhashable values (arrays, lists, dicts)
+    are rejected here with the offending name instead of surfacing as an
+    opaque ``unhashable type`` deep inside a dict probe.
+    """
+    if isinstance(value, (bool, np.bool_)):
+        return bool(value)
+    if isinstance(value, (int, np.integer)):
+        return int(value)
+    if isinstance(value, (float, np.floating)):
+        v = float(value)
+        return int(v) if v.is_integer() else v
+    try:
+        hash(value)
+    except TypeError:
+        raise TypeError(
+            f"parameter {name!r} has unhashable value {value!r} "
+            f"({type(value).__name__}); cache keys need scalar parameter "
+            "values") from None
+    return value
+
+
+def _norm_params(params: dict) -> dict:
+    """The params dict with every value scalar-normalized (see
+    :func:`_norm_value`); entries store this form so donor comparisons and
+    incremental stitching never see mixed numpy/Python scalar types."""
+    return {k: _norm_value(k, v) for k, v in params.items()}
+
+
 def _params_key(params: dict) -> tuple:
-    return tuple(sorted(params.items()))
+    return tuple(sorted(_norm_params(params).items()))
 
 
 def _sched_nbytes(s) -> int:
@@ -129,7 +163,7 @@ class GraphCache:
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
-                ent = _Entry(params=dict(params))
+                ent = _Entry(params=_norm_params(params))
                 self._entries[key] = ent
             if getattr(ent, name) is None:
                 setattr(ent, name, value)
@@ -158,6 +192,35 @@ class GraphCache:
         with self._lock:
             ent = self._entries.get(self._key(graph, params))
             return getattr(ent, name) if ent is not None else None
+
+    #: product kind -> the entry fields that make up its return value
+    #: (in return order; every field present ⇒ the whole answer is warm).
+    PRODUCT_FIELDS = {"graph": ("ig",), "schedule": ("ig", "schedule"),
+                     "packed": ("dg", "ds"), "fused": ("dg", "ds", "fo")}
+
+    def lookup_product(self, graph, params: dict, kind: str):
+        """Atomic warm hit for a whole product ``kind``, or ``None``.
+
+        One probe under the cache lock returns every array the product
+        needs (``graph`` → ig, ``schedule`` → (ig, schedule), ``packed`` →
+        (dg, ds), ``fused`` → (dg, ds, fo)) — so a caller holding the
+        result can never lose a component to a concurrent eviction, unlike
+        a ``peek`` followed by a re-fetch.  A full hit counts one hit and
+        touches the LRU; any missing component returns ``None`` without
+        counting (the cold fill that follows counts its own misses).
+        """
+        fields = self.PRODUCT_FIELDS[kind]
+        key = self._key(graph, params)
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                return None
+            vals = tuple(getattr(ent, f) for f in fields)
+            if any(v is None for v in vals):
+                return None
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return vals[0] if len(vals) == 1 else vals
 
     # ------------------------------------------------------------ products
     def graph(self, graph, params: dict,

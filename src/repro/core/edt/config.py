@@ -253,6 +253,17 @@ class Session:
         return DeviceExecutor(ig, packed=(dg, None), use_pallas=use_pallas,
                               interpret=interpret)
 
+    def distributed(self, graph, params: dict, *, ranks: int = 2, **kw):
+        """Distributed counted-sync run over the cached index graph —
+        ``kw`` forwards ``engine=``/``transport=``/``timeout=``... to
+        :func:`~repro.core.edt.distributed.run_distributed`; the session's
+        ``faults``/``recovery`` knobs arm injection and retry (see
+        ``docs/distributed.md``)."""
+        from .distributed import run_distributed
+        ig = self.index_graph(graph, params)
+        return run_distributed(ig, ranks=ranks,
+                               config=self.runtime_config(), **kw)
+
     def fused_executor(self, graph, params: dict, *, replay: bool = True,
                        **kw):
         """A :class:`~repro.core.edt.fused.FusedExecutor` over the cached

@@ -194,6 +194,20 @@ def decrement_reference(indeg, frontier, dec_src, dec_ptr):
     return new_indeg, (new_indeg == 0) & (dec > 0)
 
 
+def make_xla_step():
+    """The wavefront step as fused XLA ops, ready to jit.
+
+    Public spelling of the discover sweep's default decrement
+    (:func:`_step_xla`): the distributed runtime's device rank engine
+    steps each rank's *local* counters through this exact function, so a
+    per-rank sweep is observably the single-host sweep restricted to the
+    rank's task range (``core/edt/distributed.py``).
+    """
+    import jax.numpy as jnp
+
+    return _step_xla(jnp)
+
+
 def _step_xla(jnp):
     """The reference step as fused XLA ops (the default device path)."""
 

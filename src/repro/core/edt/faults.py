@@ -22,6 +22,10 @@ kind                   meaning / injection site
 ``TASK_BODY_ERROR``    a task body raises at task ``t`` (threaded / Sim)
 ``DROPPED_DECREMENT``  one predecessor signal of task ``t`` never arrives
                        (threaded successors / device counter init)
+``RANK_CRASH``         a distributed rank dies mid-run (``index`` = rank;
+                       ``hard=True`` kills the rank process)
+``MESSAGE_LOSS``       one cross-rank decrement batch is dropped in flight
+                       (``round`` = source rank, ``index`` = destination)
 =====================  =====================================================
 
 Shard faults address a pool round (0 = counts, 1 = tiles, 2 = edges) and a
@@ -49,9 +53,12 @@ WORKER_HANG = "worker_hang"
 SHM_ATTACH_FAIL = "shm_attach_fail"
 TASK_BODY_ERROR = "task_body_error"
 DROPPED_DECREMENT = "dropped_decrement"
+RANK_CRASH = "rank_crash"
+MESSAGE_LOSS = "message_loss"
 
 SHARD_KINDS = (WORKER_CRASH, WORKER_HANG, SHM_ATTACH_FAIL)
-KINDS = SHARD_KINDS + (TASK_BODY_ERROR, DROPPED_DECREMENT)
+DIST_KINDS = (RANK_CRASH, MESSAGE_LOSS)
+KINDS = SHARD_KINDS + (TASK_BODY_ERROR, DROPPED_DECREMENT) + DIST_KINDS
 
 
 class InjectedWorkerCrash(RuntimeError):
@@ -68,6 +75,15 @@ class InjectedTaskError(RuntimeError):
     def __init__(self, task):
         super().__init__(f"injected task-body fault at task {task!r}")
         self.task = task
+
+
+class InjectedRankCrash(RuntimeError):
+    """A distributed rank died mid-run (soft injection of ``RANK_CRASH``)."""
+
+    def __init__(self, rank: int, attempt: int):
+        super().__init__(
+            f"injected rank crash (rank {rank}, attempt {attempt})")
+        self.rank = rank
 
 
 @dataclass(frozen=True)
@@ -155,22 +171,45 @@ class FaultPlan:
     def dropped_tasks(self) -> list:
         return [f.task for f in self.faults if f.kind == DROPPED_DECREMENT]
 
+    def rank_fault(self, rank: int) -> Optional[Fault]:
+        """The ``RANK_CRASH`` fault addressed to ``rank`` (``index``), if any."""
+        for f in self.faults:
+            if f.kind == RANK_CRASH and f.index == rank:
+                return f
+        return None
+
+    def message_fault(self, src_rank: int, dst_rank: int) -> Optional[Fault]:
+        """The ``MESSAGE_LOSS`` fault on the ``src -> dst`` channel
+        (``round`` = source rank, ``index`` = destination rank), if any."""
+        for f in self.faults:
+            if (f.kind == MESSAGE_LOSS and f.round == src_rank
+                    and f.index == dst_rank):
+                return f
+        return None
+
     def shard_kinds(self) -> list:
         return [f for f in self.faults if f.kind in SHARD_KINDS]
+
+    def dist_kinds(self) -> list:
+        return [f for f in self.faults if f.kind in DIST_KINDS]
 
     def record(self, kind: str, where, attempt: int, error=None) -> None:
         self.fired.append((kind, where, attempt, repr(error) if error else None))
 
     # ------------------------------------------------------- recoverability
     def recoverable(self, max_retries: int) -> bool:
-        """Whether a retrying sharded run must end byte-identical.
+        """Whether a retrying run must end byte-identical.
 
-        Shard faults recover iff every one exhausts within the retry
-        budget.  Task-level faults are never "recovered" — they quarantine
-        or stall by design — so a plan containing them is judged on its
-        shard faults only.
+        Shard faults and distributed faults (rank crash, message loss)
+        recover iff every one exhausts within the retry budget — shard
+        blocks and whole distributed attempts are both pure functions of
+        their inputs, so a retried run reproduces the fault-free bytes.
+        Task-level faults are never "recovered" — they quarantine or stall
+        by design — so a plan containing them is judged on the retryable
+        kinds only.
         """
-        return all(f.times <= max_retries for f in self.shard_kinds())
+        return all(f.times <= max_retries
+                   for f in self.shard_kinds() + self.dist_kinds())
 
     # ------------------------------------------------------------- factory
     @classmethod

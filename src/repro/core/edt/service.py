@@ -33,10 +33,9 @@ from typing import AsyncIterator, Optional
 from .cache import _params_key
 from .config import ExecutionConfig, Session
 
-#: product kind -> the cache field whose presence makes the answer warm
-#: (fields fill in dependency order and evict as one entry, so the
-#: terminal field present ⇒ everything the kind returns is present).
-_KINDS = {"graph": "ig", "schedule": "schedule", "packed": "ds"}
+#: product kinds the service answers (the cache's product-field map is the
+#: authority on which stored arrays make each one warm).
+_KINDS = ("graph", "schedule", "packed")
 
 
 class ScheduleService:
@@ -56,6 +55,7 @@ class ScheduleService:
             raise TypeError("pass session= or config=, not both")
         self.session = session if session is not None else Session(config)
         self._own_session = session is None
+        self._closed = False
         self._inflight: dict = {}
         self._exec = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="edt-serve")
@@ -104,12 +104,18 @@ class ScheduleService:
         return cache.packed(graph, params, cfg)
 
     async def _get(self, graph, params: dict, kind: str):
+        if self._closed:
+            raise RuntimeError("ScheduleService is closed")
         self.requests += 1
         cache = self.session.cache
-        if cache.peek(graph, params, _KINDS[kind]) is not None:
-            # warm: answer inline — never touches the pool or the executor
+        # warm: one atomic probe returns the whole product — never touches
+        # the pool or the executor.  (A peek-then-refetch pair would race
+        # eviction: the entry can vanish between the two, silently turning
+        # the "inline hit" into a full cold materialization ON the loop.)
+        got = cache.lookup_product(graph, params, kind)
+        if got is not None:
             self.warm += 1
-            return self._fill(graph, params, kind)
+            return got
         key = (graph.fingerprint(), _params_key(params), kind)
         fut = self._inflight.get(key)
         if fut is not None:
@@ -140,7 +146,20 @@ class ScheduleService:
         }
 
     def close(self) -> None:
+        """Drain in-flight fills, then tear down — idempotent.
+
+        New requests are refused first (``_get`` checks ``_closed``), then
+        the thread pool shuts down with ``wait=True`` — every registered
+        in-flight fill runs entirely on that pool, so the shutdown IS the
+        drain: when it returns, no fill can still be using the session, and
+        an owned session (and its process pool) is safe to close under it.
+        Clients already awaiting a drained future resolve normally.
+        """
+        if self._closed:
+            return
+        self._closed = True
         self._exec.shutdown(wait=True)
+        self._inflight.clear()
         if self._own_session:
             self.session.close()
 

@@ -1,0 +1,333 @@
+"""Distributed counted-sync suite: rank partition, message decrements,
+exactly-once delivery, and fault recovery (``docs/distributed.md``).
+
+The contract under test:
+
+* the rank partition covers the graph exactly — every counter, every edge,
+  and every cross-rank decrement accounted once;
+* for seeded programs × rank counts × engines × transports, the union of
+  per-rank frontiers is byte-identical to the single-host oracles
+  (``schedule_from_graph`` levels, ``simulate_indexed`` execution order,
+  ``DeviceExecutor`` discover frontiers);
+* duplicate message batches are admitted exactly once (sequence-numbered
+  mailboxes), so replayed traffic never corrupts a counter;
+* an injected rank crash or lost decrement batch fails the attempt
+  *visibly* (``RankFailureError`` / ``StallError`` with the undrained
+  counters named) and recovers byte-identically under a ``RetryPolicy``;
+* the ``EDT_DIST_ACCEPT`` gate runs the ≥10M-task jacobi2d acceptance
+  across 2 ranks against the single-host sweep.
+"""
+from __future__ import annotations
+
+import os
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.edt import (DeviceExecutor, ExecutionConfig, Fault,
+                            FaultPlan, InjectedRankCrash, MESSAGE_LOSS,
+                            Mailbox, MsgBatch, RANK_CRASH, RankEngine,
+                            RankFailureError, RetryPolicy, Session,
+                            StallError, TiledTaskGraph, partition_graph,
+                            plan_ranks, run_distributed,
+                            schedule_from_graph, simulate_indexed)
+from repro.core.poly import Tiling
+from repro.core.programs import PROGRAMS
+
+CASES = [
+    ("jacobi2d", (2, 2, 2), {"T": 8, "N": 24}),
+    ("trisolv", (2, 2), {"N": 20}),
+    ("seidel1d", (2, 2), {"T": 10, "N": 30}),
+    ("diamond", (2, 2), {"K": 12}),
+    ("pipeline", (1, 1), {"M": 12, "S": 5}),
+]
+
+RETRY = RetryPolicy(max_retries=3, base_delay=0.001)
+
+
+def _ig(name, tiles, params):
+    g = TiledTaskGraph(PROGRAMS[name](), {"S": Tiling(tiles)},
+                       backend="numpy")
+    return g.index_graph(params)
+
+
+def assert_matches_host(ig, run, sched=None) -> None:
+    """The differential property: merged rank frontiers == host frontiers,
+    byte for byte, and the Sim replays the identical order."""
+    if sched is None:
+        sched = schedule_from_graph(ig)
+    assert run.depth == sched.depth
+    for got, want in zip(run.levels, sched.levels):
+        assert got.dtype == want.dtype
+        assert np.array_equal(got, want)
+    assert run.level_of.tobytes() == sched.level_of.tobytes()
+    sim = simulate_indexed(sched, workers=3)
+    assert np.array_equal(run.exec_order, np.asarray(sim.exec_order))
+
+
+# ---------------------------------------------------------------- partition
+def test_partition_covers_graph_exactly():
+    """Counters, local edges, cross edges, expected decrements: each
+    accounted exactly once across the rank slices."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    for ranks in (1, 2, 3, 5):
+        slices = partition_graph(ig, ranks)
+        bounds = plan_ranks(ig.n, ranks)
+        assert bounds[0] == 0 and bounds[-1] == ig.n
+        assert np.array_equal(
+            np.concatenate([sl.indeg for sl in slices]), ig.pred_n)
+        n_local = sum(int(sl.l_tgt.size) for sl in slices)
+        n_cross = sum(int(sl.r_tgt.size) for sl in slices)
+        assert n_local + n_cross == ig.n_edges
+        # every expected decrement has exactly one sender
+        assert sum(sl.expected_in for sl in slices) == n_cross
+        for sl in slices:
+            assert sl.l_indptr[-1] == sl.l_tgt.size
+            assert sl.r_indptr[-1] == sl.r_tgt.size
+            if sl.l_tgt.size:
+                assert sl.l_tgt.min() >= 0 and sl.l_tgt.max() < sl.n_local
+            if sl.r_tgt.size:   # remote targets never land in-range
+                assert ((sl.r_tgt < sl.lo) | (sl.r_tgt >= sl.hi)).all()
+
+
+def test_plan_ranks_is_deterministic_divmod():
+    bounds = plan_ranks(10, 4)
+    assert bounds.tolist() == [0, 3, 6, 8, 10]
+    assert np.array_equal(bounds, plan_ranks(10, 4))
+    with pytest.raises(ValueError):
+        plan_ranks(10, 0)
+
+
+# ------------------------------------------------------------- differential
+@pytest.mark.parametrize("name,tiles,params", CASES)
+@pytest.mark.parametrize("ranks", [1, 2, 4])
+def test_inline_numpy_matches_single_host(name, tiles, params, ranks):
+    ig = _ig(name, tiles, params)
+    run = run_distributed(ig, ranks=ranks, engine="numpy",
+                          transport="inline")
+    assert_matches_host(ig, run)
+    stats = run.rank_stats
+    assert sum(s.started for s in stats) == ig.n
+    assert sum(s.msgs_in for s in stats) == sum(s.msgs_out for s in stats)
+    assert not any(s.duplicates for s in stats)
+
+
+@pytest.mark.parametrize("ranks", [2, 3])
+def test_inline_device_engine_matches_device_executor(ranks):
+    """The device rank engine (the single-host jitted decrement step,
+    per rank) agrees with both the host oracle and the single-host
+    ``DeviceExecutor`` discover sweep."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    run = run_distributed(ig, ranks=ranks, engine="device",
+                          transport="inline")
+    assert_matches_host(ig, run)
+    dev = DeviceExecutor(ig).run()
+    assert np.array_equal(run.exec_order, dev.exec_order)
+    assert run.level_of.tobytes() == dev.level_of.tobytes()
+
+
+def test_inline_pallas_engine_matches():
+    ig = _ig("trisolv", (2, 2), {"N": 20})
+    run = run_distributed(ig, ranks=2, engine="device", transport="inline",
+                          use_pallas=True)
+    assert_matches_host(ig, run)
+
+
+@pytest.mark.parametrize("ranks", [2, 4])
+def test_process_transport_matches_single_host(ranks):
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    run = run_distributed(ig, ranks=ranks, engine="numpy",
+                          transport="processes", timeout=30.0)
+    assert_matches_host(ig, run)
+    assert run.attempts == 0
+
+
+def test_process_transport_spawn_safe():
+    """The rank worker is a module-level entry point: the run survives the
+    spawn start method (no inherited interpreter state)."""
+    ig = _ig("trisolv", (2, 2), {"N": 20})
+    run = run_distributed(ig, ranks=2, engine="numpy",
+                          transport="processes", timeout=30.0,
+                          start_method="spawn")
+    assert_matches_host(ig, run)
+
+
+def test_more_ranks_than_wavefronts():
+    """Degenerate splits (nearly one task per rank) still merge exactly."""
+    ig = _ig("trisolv", (2, 2), {"N": 8})
+    run = run_distributed(ig, ranks=min(8, ig.n), transport="inline")
+    assert_matches_host(ig, run)
+
+
+def test_session_distributed_uses_cached_graph():
+    g = TiledTaskGraph(PROGRAMS["trisolv"](), {"S": Tiling((2, 2))},
+                       backend="numpy")
+    with Session() as s:
+        ig = s.index_graph(g, {"N": 20})
+        hits0 = s.cache.info()["hits"]
+        run = s.distributed(g, {"N": 20}, ranks=2, transport="inline")
+        assert s.cache.info()["hits"] > hits0    # served from the cache
+        assert_matches_host(ig, run)
+
+
+def test_engine_transport_validation():
+    ig = _ig("trisolv", (2, 2), {"N": 8})
+    with pytest.raises(ValueError, match="inline transport"):
+        run_distributed(ig, ranks=2, engine="device", transport="processes")
+    with pytest.raises(ValueError, match="transport"):
+        run_distributed(ig, ranks=2, transport="telepathy")
+    with pytest.raises(ValueError, match="engine"):
+        run_distributed(ig, ranks=2, engine="abacus", transport="inline")
+
+
+# ------------------------------------------------------------- exactly-once
+def test_mailbox_admits_each_sequence_once():
+    mb = Mailbox(ranks=2)
+    b0 = MsgBatch(src=1, dst=0, seq=0, tgt=np.array([3, 4]),
+                  lvl=np.array([1, 1]))
+    b1 = MsgBatch(src=1, dst=0, seq=1, tgt=np.array([5]), lvl=np.array([2]))
+    assert mb.admit(b0) and mb.admit(b1)
+    assert not mb.admit(b0) and not mb.admit(b1)   # replays dropped
+    assert mb.duplicates == 2
+    assert mb.admitted_msgs == 3 and mb.admitted_batches == 2
+
+
+def test_duplicate_batches_never_double_decrement():
+    """Adversarial fabric: every batch delivered twice.  The mailboxes
+    drop every replay, counters drain exactly once, and the merged
+    frontiers stay byte-identical to the oracle."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    slices = partition_graph(ig, 2)
+    engines = [RankEngine(sl) for sl in slices]
+    queues = [deque(), deque()]
+    while True:
+        for eng, q in zip(engines, queues):
+            while q:
+                eng.apply(q.popleft())
+        if all(e.done for e in engines):
+            break
+        moved = any(e.pending_size for e in engines)
+        for eng in engines:
+            for b in eng.superstep():
+                queues[b.dst].append(b)
+                queues[b.dst].append(MsgBatch(        # the replay
+                    src=b.src, dst=b.dst, seq=b.seq,
+                    tgt=b.tgt.copy(), lvl=b.lvl.copy()))
+        assert moved or any(queues), "stalled under duplicate delivery"
+    sent = sum(e.batches_out for e in engines)
+    assert sent > 0
+    assert sum(e.mail.duplicates for e in engines) == sent
+    assert sum(e.mail.admitted_batches for e in engines) == sent
+    level_of = np.empty(ig.n, dtype=np.int64)
+    for sl, eng in zip(slices, engines):
+        level_of[sl.lo:sl.hi] = eng.level
+    assert level_of.tobytes() == \
+        schedule_from_graph(ig).level_of.tobytes()
+
+
+# ---------------------------------------------------------- fault recovery
+@pytest.mark.parametrize("transport", ["inline", "processes"])
+def test_rank_crash_recovers_byte_identical(transport):
+    """A rank dying mid-run is retried; the recovered run is byte-identical
+    to a fault-free one and the plan logged every fire."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    plan = FaultPlan(faults=(Fault(kind=RANK_CRASH, index=1, times=2),))
+    assert plan.recoverable(RETRY.max_retries)
+    cfg = ExecutionConfig(faults=plan, recovery=RETRY)
+    run = run_distributed(ig, ranks=2, transport=transport, timeout=15.0,
+                          config=cfg)
+    assert run.attempts == 2
+    assert [f[0] for f in plan.fired] == [RANK_CRASH, RANK_CRASH]
+    assert_matches_host(ig, run)
+
+
+def test_hard_rank_crash_kills_process_and_recovers():
+    """``hard=True`` takes the rank process down with ``os._exit``; the
+    driver sees the dead process, fails the attempt, and the retry is
+    byte-identical."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    plan = FaultPlan(faults=(
+        Fault(kind=RANK_CRASH, index=0, times=1, hard=True),))
+    cfg = ExecutionConfig(faults=plan, recovery=RETRY)
+    run = run_distributed(ig, ranks=2, transport="processes", timeout=15.0,
+                          config=cfg)
+    assert run.attempts == 1
+    assert_matches_host(ig, run)
+
+
+@pytest.mark.parametrize("transport", ["inline", "processes"])
+def test_message_loss_stalls_then_recovers(transport):
+    """A dropped decrement batch leaves ``received < expected_in``: the
+    attempt surfaces as a stall (never a hang, never a wrong answer) and
+    the retry redelivers."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    plan = FaultPlan(faults=(
+        Fault(kind=MESSAGE_LOSS, round=0, index=1, times=1),))
+    cfg = ExecutionConfig(faults=plan, recovery=RETRY)
+    run = run_distributed(ig, ranks=2, transport=transport, timeout=2.0,
+                          config=cfg)
+    assert run.attempts == 1
+    assert plan.fired and plan.fired[0][0] == MESSAGE_LOSS
+    assert_matches_host(ig, run)
+
+
+def test_message_loss_without_policy_raises_stall_report():
+    """No retry policy: the loss is a diagnosis, not a hang — the report
+    names the undrained counters and the missing decrement count."""
+    ig = _ig("jacobi2d", (2, 2, 2), {"T": 8, "N": 24})
+    plan = FaultPlan(faults=(
+        Fault(kind=MESSAGE_LOSS, round=0, index=1, times=1),))
+    with pytest.raises(StallError) as exc:
+        run_distributed(ig, ranks=2, transport="inline",
+                        config=ExecutionConfig(faults=plan))
+    report = exc.value.report
+    assert report.undrained
+    assert "decrement" in report.note
+    assert report.to_json()          # serializes for the CI artifact
+
+
+def test_crash_beyond_retry_budget_raises():
+    ig = _ig("trisolv", (2, 2), {"N": 20})
+    plan = FaultPlan(faults=(Fault(kind=RANK_CRASH, index=0, times=5),))
+    assert not plan.recoverable(RETRY.max_retries)
+    with pytest.raises(InjectedRankCrash):
+        run_distributed(ig, ranks=2, transport="inline",
+                        config=ExecutionConfig(
+                            faults=plan,
+                            recovery=RetryPolicy(max_retries=1,
+                                                 base_delay=0.001)))
+
+
+def test_dead_rank_without_policy_raises_failure_report():
+    ig = _ig("trisolv", (2, 2), {"N": 20})
+    plan = FaultPlan(faults=(
+        Fault(kind=RANK_CRASH, index=0, times=1, hard=True),))
+    with pytest.raises(RankFailureError) as exc:
+        run_distributed(ig, ranks=2, transport="processes", timeout=15.0,
+                        config=ExecutionConfig(faults=plan))
+    assert exc.value.report.failed
+    assert exc.value.report.to_json()
+
+
+# ------------------------------------------------------------- acceptance
+@pytest.mark.skipif(not os.environ.get("EDT_DIST_ACCEPT"),
+                    reason="set EDT_DIST_ACCEPT=1 for the ≥10M-task "
+                           "distributed acceptance run")
+def test_ten_million_task_acceptance():
+    """The acceptance run: a ≥10M-task jacobi2d graph executes across 2
+    ranks (process transport, one OS process per rank) with frontiers
+    byte-identical to the single-host ``simulate_indexed`` sweep."""
+    g = TiledTaskGraph(PROGRAMS["jacobi2d"](), {"S": Tiling((2, 2, 2))},
+                       backend="compiled")
+    ig = g.index_graph({"T": 32, "N": 1600})
+    assert ig.n >= 10_000_000
+    sched = schedule_from_graph(ig)
+    run = run_distributed(ig, ranks=2, engine="numpy",
+                          transport="processes", timeout=600.0)
+    assert run.level_of.tobytes() == sched.level_of.tobytes()
+    for got, want in zip(run.levels, sched.levels):
+        assert np.array_equal(got, want)
+    sim = simulate_indexed(sched, workers=8)
+    assert np.array_equal(run.exec_order, np.asarray(sim.exec_order))
+    assert sum(s.started for s in run.rank_stats) == ig.n

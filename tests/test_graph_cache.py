@@ -15,6 +15,8 @@ The contract under test (``docs/service.md``):
 from __future__ import annotations
 
 import asyncio
+import threading
+import time
 from concurrent.futures import ProcessPoolExecutor
 
 import numpy as np
@@ -252,6 +254,144 @@ def test_service_frontiers_stream_matches_schedule():
             assert np.array_equal(got, want)
     finally:
         service.close()
+
+
+# ===================================================== param-key hygiene
+def test_params_key_normalizes_scalar_types():
+    """``np.int64(24)`` (a sharded merge), ``24`` (a direct call), and
+    ``24.0`` (JSON) key one entry — the key holds plain Python ints."""
+    from repro.core.edt.cache import _params_key
+    a = _params_key({"N": 24, "T": 4})
+    b = _params_key({"T": np.int64(4), "N": np.float64(24.0)})
+    assert a == b
+    assert all(type(v) is int for _, v in b)
+    assert type(_params_key({"flag": np.bool_(True)})[0][1]) is bool
+    assert _params_key({"x": 2.5}) == (("x", 2.5),)   # non-integral floats
+
+
+def test_params_key_rejects_unhashable_with_named_param():
+    from repro.core.edt.cache import _params_key
+    with pytest.raises(TypeError, match="'N'.*unhashable"):
+        _params_key({"N": [24]})
+    with pytest.raises(TypeError, match="'tiles'"):
+        _params_key({"N": 24, "tiles": {"S": 2}})
+
+
+def test_cache_mixed_scalar_types_share_one_entry():
+    """Regression: numpy-scalar params used to be able to shadow the
+    Python-int entry; now they are one warm key."""
+    g = _graph("trisolv", (4, 4))
+    cache = GraphCache(CachePolicy(incremental=False))
+    cold = cache.graph(g, {"N": 24})
+    assert cache.graph(g, {"N": np.int64(24)}) is cold
+    assert cache.graph(g, {"N": np.float64(24.0)}) is cold
+    assert cache.info()["entries"] == 1
+    assert cache.info()["hits"] == 2
+
+
+# =============================================== service warm-path race
+def test_lookup_product_is_atomic_under_eviction():
+    """Regression: the service's warm path used to peek one field and then
+    re-fetch the product, racing eviction between the two probes.  One
+    ``lookup_product`` call returns the *whole* product by reference under
+    the cache lock — an eviction landing right after it cannot claw the
+    arrays back."""
+    g = _graph("trisolv", (4, 4))
+    cache = GraphCache(CachePolicy(incremental=False))
+    ig, sched = cache.schedule(g, {"N": 16})
+    got = cache.lookup_product(g, {"N": 16}, "schedule")
+    cache.clear()                     # the eviction lands after the probe
+    assert got is not None
+    got_ig, got_sched = got
+    assert got_ig is ig and got_sched is sched
+    # a partially-filled entry is never a warm product
+    cache.graph(g, {"N": 20})         # ig cached, schedule not
+    assert cache.lookup_product(g, {"N": 20}, "schedule") is None
+    assert cache.lookup_product(g, {"N": 20}, "graph") is not None
+
+
+def test_service_warm_path_never_fills_on_the_loop_under_eviction():
+    """Eviction storm (budget admits one entry, two keys alternate): every
+    materialization must run on the service executor — the loop thread
+    never blocks on a scan, no matter how the warm probe races."""
+    g = _graph("trisolv", (4, 4))
+    fill_threads = []
+    inner = g._index_graph_cfg
+
+    def counting(params, cfg, scans=None):
+        fill_threads.append(threading.current_thread().name)
+        return inner(params, cfg, scans=scans)
+
+    g._index_graph_cfg = counting
+    try:
+        session = Session(ExecutionConfig(
+            cache=CachePolicy(max_entries=1, incremental=False)))
+        service = ScheduleService(session)
+
+        async def storm():
+            for _ in range(4):
+                await service.schedule(g, {"N": 16})
+                await service.schedule(g, {"N": 20})   # evicts N=16
+
+        asyncio.run(storm())
+        assert len(fill_threads) == 8            # every request re-fills
+        assert all(t.startswith("edt-serve") for t in fill_threads)
+        stats = service.stats()
+        assert stats["cold"] == 8 and stats["warm"] == 0
+        service.close()
+        session.close()
+    finally:
+        g._index_graph_cfg = inner
+
+
+# ================================================== service close() drain
+def test_close_drains_inflight_then_tears_down():
+    """Regression: ``close()`` used to shut the executor down under live
+    fills.  Now it refuses new requests, waits for every in-flight fill,
+    and resolves already-awaiting clients normally — and it is idempotent."""
+    g = _graph("trisolv", (4, 4))
+    started, release = threading.Event(), threading.Event()
+    inner = g._index_graph_cfg
+
+    def slow(params, cfg, scans=None):
+        started.set()
+        release.wait(10)
+        return inner(params, cfg, scans=scans)
+
+    g._index_graph_cfg = slow
+    service = ScheduleService(config=ExecutionConfig())
+    results = {}
+    try:
+        client = threading.Thread(
+            target=lambda: results.update(
+                r=asyncio.run(service.schedule(g, {"N": 24}))))
+        client.start()
+        assert started.wait(10)               # the fill is in flight
+        closer = threading.Thread(target=service.close)
+        closer.start()
+        time.sleep(0.1)
+        assert closer.is_alive()              # close is draining, not axing
+        release.set()
+        closer.join(10)
+        client.join(10)
+        assert not closer.is_alive()
+        assert "r" in results                 # awaiting client resolved
+        assert results["r"][1].depth > 0
+    finally:
+        release.set()
+        g._index_graph_cfg = inner
+    service.close()                           # idempotent second close
+    with pytest.raises(RuntimeError, match="closed"):
+        asyncio.run(service.schedule(g, {"N": 30}))
+
+
+def test_close_with_no_inflight_is_clean():
+    service = ScheduleService(config=ExecutionConfig())
+    service.close()
+    service.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        asyncio.run(service.index_graph(_graph("trisolv", (4, 4)),
+                                        {"N": 12}))
 
 
 # ====================================================== introspection

@@ -81,7 +81,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 6
+    assert report["schema_version"] == 7
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
@@ -131,6 +131,26 @@ def test_fused_section_smoke():
         assert r["verified"] is True
     # the acceptance record only exists on the full flagship run
     assert out["acceptance"] is None
+    assert json.dumps(out)
+
+
+def test_distributed_section_smoke():
+    """The schema-v7 distributed section: every (ranks, transport) row
+    byte-verified against the single-host oracle, message volume equal to
+    the cross-partition edge count (docs/distributed.md)."""
+    from benchmarks import bench_distributed
+    lines, out = _collect(bench_distributed.run, smoke=True)
+    assert any(ln.startswith("ranks,transport,") for ln in lines)
+    assert out["rows"], "distributed rows missing"
+    for r in out["rows"]:
+        assert {"program", "tasks", "ranks", "engine", "transport",
+                "seconds", "per_task_us", "msgs", "batches", "cross_frac",
+                "attempts", "per_rank", "verified"} <= set(r)
+        assert r["verified"] is True
+        assert len(r["per_rank"]) == r["ranks"]
+        assert sum(s["n_local"] for s in r["per_rank"]) == r["tasks"]
+    one = next(r for r in out["rows"] if r["ranks"] == 1)
+    assert one["msgs"] == 0                      # no cross edges at 1 rank
     assert json.dumps(out)
 
 

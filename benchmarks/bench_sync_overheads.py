@@ -1,44 +1,46 @@
-"""Paper §2 / Table 2: measured overhead growth per synchronization model.
+"""Paper §2 / Table 2: the synchronization-overhead atlas.
 
-Runs each model on the diamond DAG (single dominator — the prescribed
-model's worst case) at growing task counts and reports the five overhead
-counters.  The asymptotic classes of Table 2 appear directly in the growth
-columns (n, n^2, r, 1).
+Runs every registered sync model over the atlas workload sweep
+(:mod:`repro.core.edt.atlas`: diamond grid, dense-LA Cholesky DAG,
+time-skewed stencil, banded fan-out trees x size ladder x task grain),
+fits each overhead counter's growth against the candidate asymptotic
+classes {1, r, n, e, n^2}, and checks the fits against the paper's
+Table-2 bounds.  Where the sweep overlaps the real engines it also
+records host-vs-device / distributed crossover points on the counted
+model (the one :class:`DeviceExecutor` and ``run_distributed`` execute).
+
+The return value is the schema-v8 ``sync`` section: plain dicts with
+string keys throughout — ``benchmarks/run.py`` serializes it verbatim
+(no repr fallback) and CI uploads it as the regime-map artifact
+(docs/sync_atlas.md).
 """
 from __future__ import annotations
 
-from repro.core.edt import MODELS, TiledTaskGraph, run_model
-from repro.core.poly import Tiling
-from repro.core.programs import PROGRAMS
-
-SIZES = (8, 16, 32)
-SMOKE_SIZES = (4, 8)
+from repro.core.edt import atlas
 
 
-def run(emit=print, smoke: bool = False):
-    sizes = SMOKE_SIZES if smoke else SIZES
-    g = TiledTaskGraph(PROGRAMS["diamond"](), {"S": Tiling((1, 1))})
-    emit("model,K,n_tasks,startup_ops,spatial_peak,inflight_tasks_peak,"
-         "inflight_deps_peak,garbage_peak,makespan")
-    rows = {}
-    for model in MODELS:
-        for K in sizes:
-            params = {"K": K}
-            res = run_model(model, g, params, workers=8)
-            s = res.counters.summary()
-            n = res.n_tasks
-            rows[(model, K)] = s
-            emit(f"{model},{K},{n},{s['startup_ops']},{s['spatial_peak']},"
-                 f"{s['inflight_tasks_peak']},{s['inflight_deps_peak']},"
-                 f"{s['garbage_peak']},{s['makespan']:.2f}")
-    # growth factors between the smallest and largest size (tasks scale with
-    # the square of the K ratio on the diamond grid)
-    lo, hi = sizes[0], sizes[-1]
-    ratio = (hi * hi) // (lo * lo)
-    for model in MODELS:
-        a, b = rows[(model, lo)], rows[(model, hi)]
-        emit(f"# {model}: startup x{b['startup_ops']/max(1,a['startup_ops']):.1f}, "
-             f"spatial x{b['spatial_peak']/max(1,a['spatial_peak']):.1f}, "
-             f"garbage x{b['garbage_peak']/max(1,a['garbage_peak']):.1f} "
-             f"(tasks x{ratio})")
-    return rows
+def run(emit=print, smoke: bool = False) -> dict:
+    data = atlas.sweep(smoke=smoke, emit=emit)
+
+    # growth footer: factors between the smallest and largest size, with
+    # the task/edge/width ratios measured from the graphs themselves
+    for g in data["growth"]:
+        def fmt(c):
+            v = g[c]
+            return "born" if v is None else f"x{v:.1f}"
+        emit(f"# {g['program']}/{g['model']}: "
+             f"startup {fmt('startup_ops')}, spatial {fmt('spatial_peak')}, "
+             f"garbage {fmt('garbage_peak')} "
+             f"(tasks x{g['task_factor']}, edges x{g['edge_factor']}, "
+             f"width x{g['width_factor']})")
+
+    for f in data["fits"]:
+        if not f["ok"]:
+            emit(f"# FIT MISMATCH {f['program']}/{f['model']}/{f['counter']}: "
+                 f"fitted {f['cls']} exceeds expected {f['expected']} "
+                 f"(values {f['values']})")
+    emit(f"# fits: {len(data['fits'])}, "
+         f"failures: {len(data['fit_failures'])}")
+
+    data["crossover"] = atlas.crossover(smoke=smoke, emit=emit)
+    return data

@@ -36,15 +36,19 @@ subprocess projection timeouts) — a correctness-and-entry-point check that
 finishes in well under a minute; full runs remain the default.
 
 ``--json PATH`` writes a machine-readable result file so CI can upload and
-diff perf artifacts across PRs.  Stable schema (version 7):
+diff perf artifacts across PRs.  Stable schema (version 8):
 
-    {"schema_version": 7, "smoke": bool, "host": {"cpus": int},
+    {"schema_version": 8, "smoke": bool, "host": {"cpus": int},
      "sections": {name: {"ok": bool, "seconds": float, "data": ...}}}
 
 where ``data`` is the section's own return value (e.g. taskgen emits
 ``{"rows": [{"program", "backend", "shards", "tasks_per_s", ...}],
-"geomean": ..., "shard_scale": [...]}``) when it is JSON-serializable,
-else its ``repr``.  Sharded rows record their shard count in ``shards``;
+"geomean": ..., "shard_scale": [...]}``) and MUST be JSON-serializable:
+a section returning anything ``json.dumps`` rejects is recorded with
+``ok = False`` and an ``unserializable`` error entry, and the harness
+exits non-zero.  (Through v7 such data was silently downgraded to
+``repr(...)``, which is how the ``sync`` section shipped opaque for five
+schema versions.)  Sharded rows record their shard count in ``shards``;
 single-process rows carry ``shards = 1``.
 
 New in v3: the ``executor`` section returns structured data instead of a
@@ -82,6 +86,16 @@ per_task_us, msgs, batches, cross_frac, attempts, per_rank, verified}``
 where ``per_rank`` breaks out each rank's task count, message traffic and
 µs/task, and every row's merged frontiers are verified byte-identical to
 the single-host sweep before it is recorded.
+
+New in v8: the ``sync`` section is the Table-2 overhead atlas
+(docs/sync_atlas.md) — ``{rows, fits, growth, crossover, ...}`` where
+``rows`` are per-(program, model, size, grain) counter measurements over
+the atlas workloads, ``fits`` assert each counter's fitted asymptotic
+class {1, r, n, e, n^2} against the paper's Table-2 bound, ``growth``
+reports lo->hi growth factors with measured task/edge/width ratios, and
+``crossover`` prices the counted model through the host simulator, the
+device replay sweep, and a two-rank distributed run.  Unserializable
+section data now fails the harness instead of degrading to ``repr``.
 """
 from __future__ import annotations
 
@@ -91,6 +105,42 @@ import json
 import os
 import sys
 import time
+
+SCHEMA_VERSION = 8
+
+
+def encode_section_data(data):
+    """Validate section data for the JSON report.
+
+    Returns ``(ok, data)``: the data unchanged when ``json.dumps`` accepts
+    it, else ``(False, {"unserializable": ...})`` describing the failure —
+    never a silent ``repr`` downgrade (the bug that shipped the ``sync``
+    section as an opaque string from schema v2 through v7).
+    """
+    try:
+        json.dumps(data)
+    except (TypeError, ValueError) as e:
+        return False, {"unserializable": repr(e), "type": type(data).__name__}
+    return True, data
+
+
+def section_registry() -> dict:
+    """Name -> run function for every benchmark section (import on call)."""
+    from . import (bench_compile, bench_distributed, bench_executor,
+                   bench_faults, bench_fused, bench_roofline,
+                   bench_service, bench_sync_overheads, bench_taskgen)
+
+    return {
+        "compile": bench_compile.run,
+        "taskgen": bench_taskgen.run,
+        "sync": bench_sync_overheads.run,
+        "executor": bench_executor.run,
+        "roofline": bench_roofline.run,
+        "faults": bench_faults.run,
+        "service": bench_service.run,
+        "fused": bench_fused.run,
+        "distributed": bench_distributed.run,
+    }
 
 
 def main(argv=None) -> int:
@@ -105,25 +155,11 @@ def main(argv=None) -> int:
                     help="write machine-readable results to PATH")
     args = ap.parse_args(argv)
 
-    from . import (bench_compile, bench_distributed, bench_executor,
-                   bench_faults, bench_fused, bench_roofline,
-                   bench_service, bench_sync_overheads, bench_taskgen)
-
-    sections = {
-        "compile": bench_compile.run,
-        "taskgen": bench_taskgen.run,
-        "sync": bench_sync_overheads.run,
-        "executor": bench_executor.run,
-        "roofline": bench_roofline.run,
-        "faults": bench_faults.run,
-        "service": bench_service.run,
-        "fused": bench_fused.run,
-        "distributed": bench_distributed.run,
-    }
+    sections = section_registry()
     if args.only:
         sections = {args.only: sections[args.only]}
     rc = 0
-    report = {"schema_version": 7, "smoke": bool(args.smoke),
+    report = {"schema_version": SCHEMA_VERSION, "smoke": bool(args.smoke),
               "host": {"cpus": os.cpu_count()}, "sections": {}}
     for name, fn in sections.items():
         print(f"\n===== bench:{name} =====", flush=True)
@@ -140,10 +176,12 @@ def main(argv=None) -> int:
             data = repr(e)
             rc = 1
         dt = time.time() - t0
-        try:
-            json.dumps(data)
-        except (TypeError, ValueError):
-            data = repr(data)
+        if ok:
+            ok, data = encode_section_data(data)
+            if not ok:
+                print(f"# section {name} returned unserializable data: "
+                      f"{data['unserializable']}")
+                rc = 1
         report["sections"][name] = {"ok": ok, "seconds": round(dt, 3),
                                     "data": data}
         print(f"# bench:{name} took {dt:.1f}s", flush=True)

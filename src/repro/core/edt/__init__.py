@@ -5,6 +5,9 @@ through :class:`ExecutionConfig`/:class:`Session` (``docs/backends.md``,
 migration section); the per-call ``shards=``/``parallel=``/``pool=``/
 ``faults=``/``recovery=`` kwargs are deprecated shims.
 """
+from .atlas import (ATLAS_COUNTERS, AtlasWorkload, Instance, WORKLOADS,
+                    atlas_crossover, atlas_sweep, build_instances, fit_class,
+                    fit_rows, growth_rows, measure, reference_curves)
 from .cache import GraphCache, graph_cache_info
 from .config import CachePolicy, ExecutionConfig, Session
 from .device import (DeviceCounters, DeviceExecutor, DeviceGraph, DeviceRun,
@@ -52,6 +55,9 @@ __all__ = [
     "FusedExecutor", "FusedRun", "pack_origins", "host_execute",
     "graph_tile",
     "Sim", "Counters", "Gauge",
+    "AtlasWorkload", "Instance", "WORKLOADS", "ATLAS_COUNTERS",
+    "atlas_sweep", "atlas_crossover", "build_instances", "measure",
+    "reference_curves", "fit_class", "fit_rows", "growth_rows",
     "MODELS", "run_model", "RunResult", "validate_order",
     "run_prescribed", "run_tags1", "run_tags2", "run_counted",
     "run_autodec", "run_autodec_nosrc",

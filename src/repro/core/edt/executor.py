@@ -84,10 +84,19 @@ class Sim:
 
     def __init__(self, workers: int = 4, task_dur: float = 1.0,
                  setup_cost: float = 0.01,
-                 on_task_error: Optional[Callable] = None):
+                 on_task_error: Optional[Callable] = None,
+                 on_start: Optional[Callable] = None):
         self.workers = workers
         self.task_dur = task_dur
         self.setup_cost = setup_cost
+        # Start hook: called with the task key at dispatch time, after the
+        # task is recorded in exec_order and before its completion is
+        # scheduled.  The sync models hang their GC-at-start side effects
+        # here (syncmodels.py) — it is part of the dispatch loop proper, so
+        # model instrumentation can never drift from the real exactly-once
+        # guard / worker accounting the way a monkey-patched clone of
+        # _dispatch would.  Settable after construction.
+        self.on_start = on_start
         # Robustness hook: with on_task_error set, a run_fn exception is
         # caught at completion time — recorded in task_errors and reported
         # to the callback — instead of unwinding through run() and leaving
@@ -208,6 +217,8 @@ class Sim:
             self.running += 1
             self.exec_order.append(key)
             self._started_any = True
+            if self.on_start is not None:
+                self.on_start(key)
 
             def complete(key=key, run_fn=run_fn) -> None:
                 try:

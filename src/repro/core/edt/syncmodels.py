@@ -107,35 +107,31 @@ def run_prescribed(graph: TiledTaskGraph, params: dict, workers: int = 4,
                 sim.make_ready(t, completion_of[t])
     sim.at(len(ops) * setup_cost, seed)
 
-    # hook start side effects into dispatch by wrapping make_ready keys
-    _wrap_starts(sim, start_of)
+    order = _install_start_hook(sim, start_of)
     sim.run()
-    return RunResult("prescribed", C, sim.exec_order, len(g.tasks), g.n_edges)
+    return RunResult("prescribed", C, order, len(g.tasks), g.n_edges)
 
 
-def _wrap_starts(sim: Sim, start_of: dict[TaskId, Callable]) -> None:
-    """Run per-task start side effects at dispatch time (GC-at-start etc.)."""
+def _install_start_hook(sim: Sim, start_of: dict[TaskId, Callable]) -> list:
+    """Run per-task start side effects at dispatch time (GC-at-start etc.).
 
-    def dispatch():
-        if not sim.gate_open:
-            return
-        while sim.free > 0 and sim.ready:
-            key, run_fn = sim.ready.popleft()
-            sim.free -= 1
-            sim.running += 1
-            sim.exec_order.append((key, sim.now))
-            if key in start_of:
-                start_of[key]()
+    Uses the first-class :attr:`Sim.on_start` hook — the side effects run
+    inside the real dispatch loop (exactly-once guard, worker accounting,
+    error handling all apply), so they can never drift from it.  Returns
+    the ``[(task, start_time)]`` list the model's :class:`RunResult`
+    reports; ``start_of`` may keep growing after installation (the autodec
+    models register tasks as they fire).
+    """
+    order: list = []
 
-            def complete(run_fn=run_fn):
-                run_fn()
-                sim.free += 1
-                sim.running -= 1
-                dispatch()
+    def on_start(key) -> None:
+        order.append((key, sim.now))
+        fn = start_of.get(key)
+        if fn is not None:
+            fn()
 
-            sim.at(sim.task_dur, complete)
-
-    sim._dispatch = dispatch
+    sim.on_start = on_start
+    return order
 
 
 # --------------------------------------------------------------------------
@@ -186,9 +182,13 @@ def _run_tags(graph: TiledTaskGraph, params: dict, per_dep_tags: bool,
                 on_execute(t)
 
         def completion():
-            for s in succs[t]:
-                k = tag_key(t, s)
-                _put(k, t)
+            if per_dep_tags:
+                for s in succs[t]:
+                    _put(tag_key(t, s), t)
+            elif succs[t]:
+                # one tag per producer ([27]): a single put serves every
+                # consumer; the key is the producer itself
+                _put(tag_key(t, succs[t][0]), t)
             return None
 
         start_of[t] = start_side_effects
@@ -197,8 +197,13 @@ def _run_tags(graph: TiledTaskGraph, params: dict, per_dep_tags: bool,
     def _consume(k, t: TaskId):
         """A get matched an existing tag."""
         if per_dep_tags:
-            # one-use tag: disposed by the runtime right after the get
-            del table[k]
+            # one-use tag: disposed by the runtime right after the get.
+            # The table counts tags per key — a multigraph (two dependences
+            # relating the same task pair, e.g. cholesky_like's panel
+            # columns) legitimately puts the same (src, dst) key twice.
+            table[k] -= 1
+            if table[k] == 0:
+                del table[k]
             C.spatial.dec()
             C.inflight_deps.dec()
         else:
@@ -207,30 +212,39 @@ def _run_tags(graph: TiledTaskGraph, params: dict, per_dep_tags: bool,
                 C.garbage.inc()  # dead but not destroyable until graph end
 
     def _put(k, src: TaskId):
-        table[k] = True
         C.spatial.inc()
         C.inflight_deps.inc()
-        if not per_dep_tags:
+        if per_dep_tags:
+            waiters = pending.get(k)
+            if waiters:
+                # each put satisfies exactly ONE outstanding get (one-use
+                # tags pair 1:1 with dependence instances, so a duplicate
+                # (src, dst) key must burn one tag per waiting get)
+                w = waiters.pop(0)
+                if not waiters:
+                    del pending[k]
+                C.inflight_deps.dec()   # the pending get record
+                C.spatial.dec()
+                C.spatial.dec()         # the tag, consumed by its getter
+                C.inflight_deps.dec()
+                waiting_n[w] -= 1
+                if waiting_n[w] == 0:
+                    sim.make_ready(w, completions[w])
+            else:
+                table[k] = table.get(k, 0) + 1
+        else:
+            table[k] = True
             tag_consumers_left[k] = len(succs[src])
             C.inflight_deps.dec()  # tags2: the tag itself resolves on put
-            if tag_consumers_left[k] == 0:
-                C.garbage.inc()
-        waiters = pending.pop(k, [])
-        for w in waiters:
-            C.inflight_deps.dec()   # the pending get record
-            C.spatial.dec()
-            if per_dep_tags:
-                # tag consumed by its unique getter
-                del table[k]
+            for w in pending.pop(k, []):
+                C.inflight_deps.dec()   # the pending get record
                 C.spatial.dec()
-                C.inflight_deps.dec()
-            else:
                 tag_consumers_left[k] -= 1
                 if tag_consumers_left[k] == 0:
                     C.garbage.inc()
-            waiting_n[w] -= 1
-            if waiting_n[w] == 0:
-                sim.make_ready(w, completions[w])
+                waiting_n[w] -= 1
+                if waiting_n[w] == 0:
+                    sim.make_ready(w, completions[w])
 
     scheduled_hooks: dict[TaskId, Callable] = {}
     completions: dict[TaskId, Callable] = {}
@@ -248,10 +262,10 @@ def _run_tags(graph: TiledTaskGraph, params: dict, per_dep_tags: bool,
         ops.append(op)
     sim.run_master(ops, gate_after_all=False)
 
-    _wrap_starts(sim, start_of)
+    order = _install_start_hook(sim, start_of)
     sim.run()
     name = "tags1" if per_dep_tags else "tags2"
-    return RunResult(name, C, sim.exec_order, n_tasks)
+    return RunResult(name, C, order, n_tasks)
 
 
 def run_tags1(graph, params, workers=4, task_dur=1.0, setup_cost=0.01,
@@ -317,9 +331,9 @@ def run_counted(graph: TiledTaskGraph, params: dict, workers: int = 4,
                 sim.make_ready(t, completions[t])
     sim.at(len(ops) * setup_cost, seed)
 
-    _wrap_starts(sim, start_of)
+    order = _install_start_hook(sim, start_of)
     sim.run()
-    return RunResult("counted", C, sim.exec_order, len(all_tasks))
+    return RunResult("counted", C, order, len(all_tasks))
 
 
 # --------------------------------------------------------------------------
@@ -385,10 +399,10 @@ def _run_autodec(graph: TiledTaskGraph, params: dict, with_src: bool,
     ops = [lambda t=t: preschedule(t) for t in seeds]
     sim.run_master(ops, gate_after_all=False)
 
-    _wrap_starts(sim, start_of)
+    order = _install_start_hook(sim, start_of)
     sim.run()
     name = "autodec" if with_src else "autodec_nosrc"
-    return RunResult(name, C, sim.exec_order, n_tasks)
+    return RunResult(name, C, order, n_tasks)
 
 
 def run_autodec(graph, params, workers=4, task_dur=1.0, setup_cost=0.01,

@@ -182,6 +182,68 @@ def trisolv() -> PolyhedralProgram:
     return P
 
 
+def cholesky_like() -> PolyhedralProgram:
+    """Right-looking tiled Cholesky task DAG (à la TaskTorrent's benchmark).
+
+    One statement S(k,i,j) over the prism {0 <= k <= j <= i <= N-1}; the
+    role of a task is positional: (k,k,k) is POTRF(k), (k,i,k) with i>k is
+    TRSM(k,i), and (k,i,j) with j>k is the SYRK/GEMM update of block (i,j)
+    at step k.  Dependences:
+
+      potrf_trsm: (k,k,k)   -> (k,i,k)    i>k   — the factored diagonal
+                                                  feeds every panel solve
+      upd_a:      (k,i,k)   -> (k,i,j)    j>k   — A(i,k) feeds row i updates
+      upd_b:      (k,j,k)   -> (k,i,j)    i>j   — A(j,k) feeds column j
+                                                  (strict: the diagonal SYRK
+                                                  needs only upd_a)
+      step:       (k,i,j)   -> (k+1,i,j)  j>k   — the updated block is the
+                                                  step-(k+1) task on (i,j),
+                                                  be it POTRF, TRSM, or GEMM
+
+    Critical path Θ(N), wavefront width Θ(N²): the dense-LA shape whose
+    frontier grows faster than the stencils' but slower than its task count
+    — the interesting middle case for the sync-overhead atlas.
+    """
+    P = PolyhedralProgram()
+    D = Polyhedron.from_ineqs(
+        ("k", "i", "j"), ("N",),
+        [(1, 0, 0, 0, 0),        # k >= 0
+         (-1, 0, 1, 0, 0),       # j >= k
+         (0, 1, -1, 0, 0),       # i >= j
+         (0, -1, 0, 1, -1)])     # i <= N-1
+    P.add_statement("S", D)
+    P.add_dependence("S", "S", dep(
+        D, D,
+        eqs=[(1, -1, 0, 0, 0, 0, 0, 0),      # i_s = k_s  (diagonal task)
+             (1, 0, -1, 0, 0, 0, 0, 0),      # j_s = k_s
+             (1, 0, 0, -1, 0, 0, 0, 0),      # k_t = k_s
+             (1, 0, 0, 0, 0, -1, 0, 0)],     # j_t = k_s  (a panel solve)
+        ineqs=[(-1, 0, 0, 0, 1, 0, 0, -1)]),  # i_t >= k_s + 1
+        "potrf_trsm")
+    P.add_dependence("S", "S", dep(
+        D, D,
+        eqs=[(1, 0, -1, 0, 0, 0, 0, 0),      # j_s = k_s  (a panel solve)
+             (1, 0, 0, -1, 0, 0, 0, 0),      # k_t = k_s
+             (0, 1, 0, 0, -1, 0, 0, 0)],     # i_t = i_s  (same row)
+        ineqs=[(-1, 0, 0, 0, 0, 1, 0, -1)]),  # j_t >= k_s + 1
+        "upd_a")
+    P.add_dependence("S", "S", dep(
+        D, D,
+        eqs=[(1, 0, -1, 0, 0, 0, 0, 0),      # j_s = k_s  (a panel solve,
+             (1, 0, 0, -1, 0, 0, 0, 0),      # k_t = k_s   strictly: i_s > k_s
+             (0, 1, 0, 0, 0, -1, 0, 0)],     # j_t = i_s   so POTRF is excluded)
+        ineqs=[(0, 0, 0, 0, 1, -1, 0, -1),    # i_t >= j_t + 1 (off-diagonal)
+               (-1, 1, 0, 0, 0, 0, 0, -1)]),  # i_s >= k_s + 1
+        "upd_b")
+    P.add_dependence("S", "S", dep(
+        D, D,
+        eqs=[(1, 0, 0, -1, 0, 0, 0, 1),      # k_t = k_s + 1
+             (0, 1, 0, 0, -1, 0, 0, 0),      # i_t = i_s
+             (0, 0, 1, 0, 0, -1, 0, 0)]),    # j_t = j_s (j_s > k_s implied
+        "step")                              #   by the target domain)
+    return P
+
+
 def lu_like() -> PolyhedralProgram:
     """Right-looking update pattern: (k,i,j) <- (k-1,i,j), plus panel deps.
 
@@ -244,6 +306,38 @@ def pipeline() -> PolyhedralProgram:
     return P
 
 
+def fanout_band(f: int) -> PolyhedralProgram:
+    """Layered band DAG with constant per-task fan-out ~2f+1; params (L, W).
+
+    Tasks (l, i) on an L×W grid; (l, i) feeds (l+1, j) for |j - i| <= f.
+    Depth and wavefront width are *independent* parameters (depth L, width
+    exactly W at every level) and the dependence fan-out is set by the
+    compile-time band radius ``f`` — the atlas's knob for sweeping
+    dependence fan-out and frontier width orthogonally (a banded stand-in
+    for fan-out trees: affine, so the fan-out must be a constant, not a
+    program parameter).
+
+    Written skewed (x = i + f·l), like the stencils: the raw band has
+    dependence components i_t - i_s < 0, so an orthogonal tiling with more
+    than one layer per tile would produce a cyclic tile graph; skewing
+    makes every component non-negative (0 <= x_t - x_s <= 2f) and any
+    tiling legal.
+    """
+    P = PolyhedralProgram()
+    D = Polyhedron.from_ineqs(
+        ("l", "x"), ("L", "W"),
+        [(1, 0, 0, 0, 0), (-1, 0, 1, 0, -1),     # 0 <= l <= L-1
+         (-f, 1, 0, 0, 0), (f, -1, 0, 1, -1)])   # f*l <= x <= f*l + W-1
+    P.add_statement("S", D)
+    P.add_dependence("S", "S", dep(
+        D, D,
+        eqs=[(1, 0, -1, 0, 0, 0, 1)],            # l_t = l_s + 1
+        ineqs=[(0, -1, 0, 1, 0, 0, 0),           # x_t >= x_s
+               (0, 1, 0, -1, 0, 0, 2 * f)]),     # x_t <= x_s + 2f
+        f"band{f}")
+    return P
+
+
 def embarrassing() -> PolyhedralProgram:
     """No dependences at all (the 'embarrassingly parallel' control case)."""
     P = PolyhedralProgram()
@@ -298,7 +392,10 @@ PROGRAMS = {name: _named(name, fn) for name, fn in {
     "matmul": matmul,
     "trisolv": trisolv,
     "lu_like": lu_like,
+    "cholesky_like": cholesky_like,
     "diamond": diamond,
+    "fanout2": lambda: fanout_band(2),
+    "fanout8": lambda: fanout_band(8),
     "pipeline": pipeline,
     "embarrassing": embarrassing,
     "synthetic5d": lambda: synthetic_highdim(5),

@@ -56,8 +56,16 @@ def test_bench_compile_smoke():
 
 def test_bench_sync_and_executor_smoke():
     from benchmarks import bench_executor, bench_sync_overheads
-    rows = bench_sync_overheads.run(emit=lambda *a, **k: None, smoke=True)
-    assert rows  # one entry per (model, size)
+    sync = bench_sync_overheads.run(emit=lambda *a, **k: None, smoke=True)
+    # schema v8: the Table-2 atlas — structured rows with string keys,
+    # fitted classes all within the paper's bounds, crossover present
+    assert json.dumps(sync)
+    assert sync["rows"] and sync["fits"] and sync["growth"]
+    assert sync["fit_failures"] == []
+    assert len({r["model"] for r in sync["rows"]}) >= 5
+    assert len({r["program"] for r in sync["rows"]}) >= 3
+    assert {r["path"] for r in sync["crossover"]["rows"]} == {
+        "host_sim", "device_replay", "distributed_inline_2"}
     out = bench_executor.run(emit=lambda *a, **k: None, smoke=True)
     assert json.dumps(out)  # v3: executor data must be JSON-serializable
     assert len(out["models"]) == (len(bench_executor.SMOKE_CASES)
@@ -81,7 +89,7 @@ def test_run_harness_smoke_mode(tmp_path):
     assert harness.main(["--smoke", "--only", "taskgen",
                          "--json", str(path)]) == 0
     report = json.loads(path.read_text())
-    assert report["schema_version"] == 7
+    assert report["schema_version"] == 8
     assert report["smoke"] is True
     assert report["host"]["cpus"] >= 1
     sec = report["sections"]["taskgen"]
@@ -89,6 +97,34 @@ def test_run_harness_smoke_mode(tmp_path):
     assert sec["data"]["rows"], "taskgen rows missing from artifact"
     assert sec["data"]["shard_scale"], "shard-scale rows missing"
     assert {r["shards"] for r in sec["data"]["rows"]} >= {1, 2}
+
+
+def test_every_section_round_trips_json_in_smoke():
+    """Every section's smoke return value must survive ``json.dumps`` — the
+    regression gate for the v2..v7 bug where the ``sync`` section returned
+    tuple-keyed dicts and shipped in every artifact as ``repr(...)``."""
+    import inspect
+
+    from benchmarks import run as harness
+    for name, fn in harness.section_registry().items():
+        params = inspect.signature(fn).parameters
+        kw = {}
+        if "smoke" in params:
+            kw["smoke"] = True
+        if "emit" in params:
+            kw["emit"] = lambda *a, **k: None
+        ok, data = harness.encode_section_data(fn(**kw))
+        assert ok, f"section {name} returned unserializable data: {data}"
+
+
+def test_encode_section_data_fails_loudly():
+    """Unserializable section data is an error record, never a repr."""
+    from benchmarks.run import encode_section_data
+    ok, data = encode_section_data({("model", 4): 1})   # the old sync shape
+    assert ok is False
+    assert "unserializable" in data and data["type"] == "dict"
+    ok, data = encode_section_data({"rows": [1, 2]})
+    assert ok is True and data == {"rows": [1, 2]}
 
 
 def test_service_section_smoke():

@@ -26,7 +26,10 @@ CASES = {
     "heat3d": ((2, 2, 2, 2), {"T": 3, "N": 4}),
     "matmul": ((2, 2, 2), {"N": 5}),
     "trisolv": ((3, 2), {"N": 9}),
+    "cholesky_like": ((2, 2, 2), {"N": 5}),
     "lu_like": ((2, 2, 2), {"N": 5}),
+    "fanout2": ((2, 3), {"L": 4, "W": 7}),
+    "fanout8": ((2, 3), {"L": 3, "W": 9}),
     "diamond": ((2, 2), {"K": 7}),
     "pipeline": ((2, 1), {"M": 5, "S": 3}),
     "embarrassing": ((4,), {"N": 13}),
